@@ -1,0 +1,77 @@
+"""Paper Table II / Fig. 3 reproduction: bit-sequence frequency analysis.
+
+Two weight sources (DESIGN.md §7.1 — ImageNet is unavailable offline):
+  * a tiny ReActNet trained on the synthetic image task until the binary
+    kernels develop structure;
+  * frequency-matched synthetic kernels drawn from the paper's published
+    node marginals.
+
+Claim C1 checked: the distribution is skewed — top-64 share far above the
+uniform 12.5%, all-zeros/ones prominent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack, frequency
+from repro.data.pipeline import SyntheticImages
+from repro.models import reactnet as rn
+from repro.train import optimizer as opt
+
+
+def train_tiny_reactnet(steps: int = 60, seed: int = 0):
+    cfg = dataclasses.replace(
+        rn.CONFIG, width=32, num_classes=10, image_size=32,
+        blocks=((2, 1), (1, 2), (2, 2), (1, 1)))
+    params = rn.init_params(cfg, jax.random.PRNGKey(seed))
+    oc = opt.OptConfig(lr=2e-2, warmup_steps=5, total_steps=steps,
+                       weight_decay=1e-4, clip_latent=1.5)
+    state = opt.init_state(params)
+    data = SyntheticImages(10, 32, 32)
+
+    @jax.jit
+    def step_fn(params, state, images, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: rn.loss_fn(cfg, p, {"images": images,
+                                          "labels": labels}))(params)
+        params, state, _ = opt.apply_updates(params, grads, state, oc)
+        return params, state, loss
+
+    first = last = None
+    for i in range(steps):
+        b = data.batch(i)
+        params, state, loss = step_fn(params, state,
+                                      jnp.asarray(b["images"]),
+                                      jnp.asarray(b["labels"]))
+        if i == 0:
+            first = float(loss)
+    last = float(loss)
+    return cfg, params, first, last
+
+
+def run() -> list[str]:
+    rows = ["source,block,top16,top64,top256,zeros_ones,uniform_top64"]
+    cfg, params, first, last = train_tiny_reactnet()
+    bits = rn.binary_weight_bits(params)
+    for i, (name, w) in enumerate(sorted(bits.items())):
+        if not name.endswith("w3"):
+            continue
+        hist = frequency.sequence_histogram(bitpack.kernel_to_sequences(w))
+        s = frequency.BlockStats.from_hist(i, hist)
+        rows.append(f"trained-tiny,{name},{s.top16:.3f},{s.top64:.3f},"
+                    f"{s.top256:.3f},{s.all_zero_one:.3f},0.125")
+    rng = np.random.default_rng(0)
+    for blk in range(3):
+        hist = frequency.synthetic_histogram(
+            (0.46, 0.24, 0.23, 0.05), 200_000, rng)
+        s = frequency.BlockStats.from_hist(blk, hist)
+        rows.append(f"paper-marginals,block{blk},{s.top16:.3f},"
+                    f"{s.top64:.3f},{s.top256:.3f},{s.all_zero_one:.3f},"
+                    "0.125")
+    rows.append(f"# tiny-reactnet train loss {first:.3f} -> {last:.3f}")
+    return rows

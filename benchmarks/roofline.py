@@ -1,0 +1,76 @@
+"""Roofline table builder: reads the dry-run artifacts and emits the
+three-term analysis per (arch x shape x mesh).
+
+Terms (seconds/step/device), hardware: TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI (2 links engaged per axis assumed):
+
+  compute    = census_FLOPs / 197e12
+  memory     = census_HBM_bytes / 819e9
+  collective = census_collective_bytes / (2 * 50e9)
+
+census_* are trip-weighted per-device statics from launch.hlo_census (XLA's
+cost_analysis undercounts scan bodies; see that module).  The memory term
+is an upper bound at CPU-backend fusion granularity.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 2 * 50e9
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "dryrun")
+
+
+def load_cells(pattern: str = "*.json") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def analyse(cell: dict) -> dict | None:
+    if cell.get("status") != "ok":
+        return None
+    comp = cell["flops"] / PEAK
+    mem = cell["bytes_accessed"] / HBM
+    coll = cell["collectives"]["total"] / ICI
+    dominant = max(("compute", comp), ("memory", mem),
+                   ("collective", coll), key=lambda kv: kv[1])
+    useful = cell["model_flops"] / max(cell["flops"] * cell["devices"], 1)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dominant[0],
+        "roofline_fraction": dominant[1] and comp / max(
+            comp, mem, coll),
+        "useful_flops_ratio": useful,
+        "model_flops": cell["model_flops"],
+        "hlo_flops_global": cell["flops"] * cell["devices"],
+    }
+
+
+def run(mesh: str = "single") -> list[str]:
+    rows = ["arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+            "roofline_frac,useful_ratio"]
+    for cell in load_cells(f"*__{mesh}.json"):
+        if cell.get("status", "").startswith("skip"):
+            rows.append(f"{cell['arch']},{cell['shape']},{mesh},,,,"
+                        f"{cell['status']},,")
+            continue
+        a = analyse(cell)
+        if a is None:
+            rows.append(f"{cell['arch']},{cell['shape']},{mesh},,,,"
+                        f"FAILED,,")
+            continue
+        rows.append(
+            f"{a['arch']},{a['shape']},{mesh},{a['compute_s']:.3f},"
+            f"{a['memory_s']:.3f},{a['collective_s']:.3f},{a['dominant']},"
+            f"{a['roofline_fraction']:.3f},{a['useful_flops_ratio']:.3f}")
+    return rows

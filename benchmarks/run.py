@@ -1,0 +1,38 @@
+"""Benchmark orchestrator — one section per paper table/figure + roofline.
+
+Prints ``name,...`` CSV sections.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (ablation_nodes, compression_table, freq_table,
+                            roofline, speedup)
+
+    sections = {
+        "freq_table": freq_table.run,            # paper Table II / Fig 3
+        "compression_table": compression_table.run,   # paper Table V
+        "speedup": speedup.run,                  # paper §VI perf claims
+        "ablation_nodes": ablation_nodes.run,    # beyond-paper design space
+        "roofline_single": lambda: roofline.run("single"),
+        "roofline_multi": lambda: roofline.run("multi"),
+    }
+    want = sys.argv[1:] or list(sections)
+    for name in want:
+        t0 = time.monotonic()
+        print(f"\n== {name} ==")
+        try:
+            for row in sections[name]():
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            print(f"# FAILED: {type(e).__name__}: {e}")
+        print(f"# ({time.monotonic() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's pipeline end-to-end in ~60 lines.
+
+1. binarise a 3x3 conv kernel -> 9-bit bit sequences (paper Fig. 2)
+2. analyse sequence frequencies (Table II)
+3. Hamming-1 clustering + simplified 4-node Huffman coding (Table V)
+4. run the conv with weights decoded INSIDE the Pallas kernel and check it
+   against the uncompressed path.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack, compression, frequency
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(0)
+
+# --- a "trained-looking" binary kernel: skewed sequence distribution ------
+hist = frequency.synthetic_histogram((0.46, 0.24, 0.23, 0.05), 64 * 64, rng)
+seqs = np.repeat(np.arange(512), hist)[: 64 * 64]
+rng.shuffle(seqs)
+w_bits = bitpack.sequences_to_kernel(seqs.reshape(64, 64).astype(np.uint16))
+print(f"kernel: Cout=64 Cin=64 3x3  ({w_bits.size} binary weights)")
+
+# --- frequency analysis (paper Table II) ----------------------------------
+h = frequency.sequence_histogram(bitpack.kernel_to_sequences(w_bits))
+print(f"top-16 share {frequency.top_k_share(h, 16):.1%}   "
+      f"top-64 {frequency.top_k_share(h, 64):.1%}   "
+      f"top-256 {frequency.top_k_share(h, 256):.1%}")
+
+# --- compression (paper Table V) -------------------------------------------
+ct_enc = compression.compress_conv3x3(w_bits, cluster=False)
+ct_cl = compression.compress_conv3x3(w_bits, cluster=True)
+print(f"compression ratio: encoding {ct_enc.ratio_stream():.3f}x, "
+      f"+clustering {ct_cl.ratio_stream():.3f}x "
+      f"(paper: 1.18-1.25 / 1.30-1.36)")
+
+# --- fused decode + xnor/popcount conv -------------------------------------
+x = rng.standard_normal((2, 8, 8, 64)).astype(np.float32)
+words, tables, meta = ops.prepare_compressed_conv(w_bits, cluster=False)
+y_compressed = ops.compressed_binary_conv3x3(
+    jnp.asarray(x), words, tables, cin=64, cout=64)
+y_reference = ref.binary_conv3x3(
+    jnp.asarray(x), jnp.asarray(w_bits.astype(np.float32) * 2 - 1))
+np.testing.assert_array_equal(np.asarray(y_compressed),
+                              np.asarray(y_reference))
+print("fused decode+conv kernel == reference BNN conv  [OK]")
+print(f"storage (stream layout): {ct_cl.ratio_stream():.3f}x fewer bits; "
+      f"kernel weight-stream (tiled, C=8): {meta['ratio_tiled']:.3f}x — "
+      "small Cout kernels don't amortise per-tile padding; see "
+      "EXPERIMENTS.md §Perf K2 for the C=64 layout reaching 1.20x")

@@ -1,0 +1,168 @@
+"""Sharded, atomic, async checkpointing (mesh-independent layout).
+
+Layout of one checkpoint:
+
+    <dir>/step_<N>/
+        manifest.json      {"step": N, "leaves": {path: {shape, dtype}},
+                            "hosts": H}
+        host<h>.npz        one entry per leaf path: this host's gathered data
+    <dir>/LATEST           text file with the newest complete step dir
+
+Writes go to ``step_<N>.tmp`` and are renamed only after everything is
+flushed — a torn write can never be picked up by restore (power-fail safe).
+Restore is mesh-independent: leaves are re-sharded onto whatever mesh the
+restoring job uses, which is what makes *elastic re-mesh* (dist.fault) work.
+
+The optional ``compress_binary`` flag Huffman-compresses binarised weight
+tensors in storage (paper technique applied to checkpoints; DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import jax
+import numpy as np
+
+from repro.core import compression
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+    jax.tree_util.tree_map_with_path(
+        lambda kp, x: out.setdefault(_path_str(kp), np.asarray(x)), tree)
+    return out
+
+
+def save(tree, directory: str, step: int, *, async_: bool = False,
+         compress_binary: bool = False) -> threading.Thread | None:
+    """Save a pytree. Returns the writer thread when ``async_``."""
+    flat = _flatten(tree)
+
+    def write():
+        tmp = os.path.join(directory, f"step_{step}.tmp")
+        final = os.path.join(directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "hosts": 1, "leaves": {}, "compressed": []}
+        blobs = {}
+        for path, arr in flat.items():
+            manifest["leaves"][path] = {"shape": list(arr.shape),
+                                        "dtype": str(arr.dtype)}
+            if (compress_binary and arr.ndim == 4
+                    and arr.dtype in (np.float32, np.float16)
+                    and "w3" in path.split("/")[-1]):
+                # lossless in the binary domain: no clustering on checkpoints
+                # (inference-snapshot feature: latents collapse to sign*scale)
+                bits = (arr >= 0).astype(np.uint8)
+                ct = compression.compress_conv3x3(bits, cluster=False)
+                blobs[path + "#stream"] = ct.stream_words
+                blobs[path + "#scale"] = np.abs(arr).mean(
+                    axis=tuple(range(1, arr.ndim)))
+                blobs[path + "#tables"] = ct.decode_tables()
+                blobs[path + "#bits"] = np.asarray([ct.stream_bits])
+                manifest["compressed"].append(path)
+            else:
+                blobs[path] = arr
+        np.savez(os.path.join(tmp, "host0.npz"), **blobs)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, final)                  # atomic publish
+        with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+            f.write(f"step_{step}")
+        os.replace(os.path.join(directory, "LATEST.tmp"),
+                   os.path.join(directory, "LATEST"))
+
+    os.makedirs(directory, exist_ok=True)
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(directory: str) -> int | None:
+    marker = os.path.join(directory, "LATEST")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(directory, name, "manifest.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(directory: str, like, *, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``like`` (pytree of arrays or SDS).
+
+    ``shardings``: optional matching pytree of NamedShardings — leaves are
+    placed shard-by-shard (device_put with sharding), so restore works on a
+    different mesh than the one that saved (elastic re-mesh).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    blobs = np.load(os.path.join(d, "host0.npz"))
+
+    leaves_flat: dict[str, np.ndarray] = {}
+    for path, meta in manifest["leaves"].items():
+        if path in manifest.get("compressed", []):
+            from repro.core import bitpack, huffman
+            words = blobs[path + "#stream"]
+            nbits = int(blobs[path + "#bits"][0])
+            shape = tuple(meta["shape"])
+            n_seqs = int(np.prod(shape[:2])) if len(shape) == 4 else None
+            # rebuild the NodeAssignment from stored tables
+            tables = blobs[path + "#tables"]
+            assign = _assignment_from_tables(tables)
+            seqs = huffman.decode_stream(words, nbits, assign, count=n_seqs)
+            bits = bitpack.sequences_to_kernel(
+                seqs.reshape(shape[:2]))
+            scale = blobs[path + "#scale"].reshape(
+                (-1,) + (1,) * (len(shape) - 1))
+            leaves_flat[path] = (bits.astype(np.float32) * 2 - 1) * scale
+        else:
+            leaves_flat[path] = blobs[path]
+
+    paths_like = []
+    jax.tree_util.tree_map_with_path(
+        lambda kp, x: paths_like.append(_path_str(kp)), like)
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    flat_shard = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat_like))
+    out = []
+    for path, proto, shd in zip(paths_like, flat_like, flat_shard):
+        arr = leaves_flat[path].astype(proto.dtype)
+        assert tuple(arr.shape) == tuple(proto.shape), (path, arr.shape)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return treedef.unflatten(out), step
+
+
+def _assignment_from_tables(tables_flat: np.ndarray):
+    """Reconstruct a NodeAssignment equivalent for decoding from the stored
+    160-entry table (escape node needs no table)."""
+    from repro.core import huffman
+    node_of = np.full(512, 3, np.int32)
+    index_of = np.arange(512, dtype=np.int32)
+    t0, t1, t2 = tables_flat[:32], tables_flat[32:96], tables_flat[96:160]
+    for n, t in enumerate((t0, t1, t2)):
+        node_of[t] = n
+        index_of[t] = np.arange(len(t))
+    return huffman.NodeAssignment(
+        node_of, index_of,
+        (t0.astype(np.uint16), t1.astype(np.uint16), t2.astype(np.uint16)))

@@ -1,0 +1,185 @@
+"""Config system: model/arch configs, input shapes, registry.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs``; ``get_config(name)`` resolves it.  Input-shape cells
+(train_4k / prefill_32k / decode_32k / long_500k) are ``ShapeConfig`` and
+``input_specs`` builds the ShapeDtypeStruct stand-ins for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # layer-stack structure: prefix + pattern * repeats + suffix
+    scan_pattern: tuple[str, ...] = ("attn",)
+    scan_repeats: int = 0
+    prefix_kinds: tuple[str, ...] = ()
+    suffix_kinds: tuple[str, ...] = ()
+
+    # attention variants
+    window: int = 0                   # sliding/local window size
+    attn_logit_softcap: float = 0.0   # gemma2
+    final_logit_softcap: float = 0.0  # gemma2
+    rope_theta: float = 10_000.0
+    post_norms: bool = False          # gemma2 sandwich norms
+    mlp_act: str = "swiglu"           # swiglu | geglu | gelu
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 0
+    nope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    expand: int = 2
+    ssm_groups: int = 1
+
+    # hybrid (recurrentgemma)
+    lru_width: int = 0
+
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0              # frames after the (stubbed) conv frontend
+
+    # vlm (paligemma)
+    num_vision_tokens: int = 0
+
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False    # gemma-family sqrt(d_model) scaling
+    remat: bool = True                # activation checkpointing on scan blocks
+    remat_policy: str = "full"        # full | dots.  §Perf iter G7: "dots"
+                                      # (save weight-stationary dot outputs)
+                                      # cuts recompute FLOPs 17% but grows
+                                      # live memory 7.9->19.2 GB/device —
+                                      # wrong trade for these memory-bound
+                                      # cells; kept selectable for compute-
+                                      # bound configs.
+    dtype: str = "bfloat16"
+
+    # paper-technique integration switches (BNN mode; see DESIGN.md §5)
+    binarize_mlp: bool = False
+    compress_weights: bool = False
+
+    @property
+    def layer_kinds(self) -> tuple[str, ...]:
+        kinds = (self.prefix_kinds
+                 + self.scan_pattern * self.scan_repeats
+                 + self.suffix_kinds)
+        # decoder-side kinds only; encoder layers (whisper) live in encdec.py
+        assert len(kinds) == self.num_layers, (self.name, len(kinds))
+        return kinds
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """A reduced copy for smoke tests."""
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# archs for which long_500k is runnable (sub-quadratic; DESIGN.md §5)
+LONG_CONTEXT_OK = frozenset({
+    "mamba2-780m", "recurrentgemma-2b", "h2o-danube-1.8b",
+    "gemma2-2b", "mixtral-8x22b",
+})
+
+ARCH_NAMES = (
+    "mamba2-780m", "gemma2-2b", "minitron-8b", "phi3-medium-14b",
+    "h2o-danube-1.8b", "mixtral-8x22b", "deepseek-v2-236b",
+    "recurrentgemma-2b", "paligemma-3b", "whisper-large-v3",
+)
+
+_MODULE_OF = {name: name.replace("-", "_").replace(".", "_")
+              for name in ARCH_NAMES}
+_MODULE_OF["reactnet"] = "reactnet"
+
+
+def get_config(name: str) -> Any:
+    """Resolve an arch name to its config object (ModelConfig or BNN config)."""
+    mod = importlib.import_module(f"repro.configs.{_MODULE_OF[name]}")
+    return mod.CONFIG
+
+
+def cell_is_runnable(arch: str, shape: str) -> tuple[bool, str]:
+    """Whether the (arch x shape) dry-run cell runs, and why not if skipped."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, "skip(full-attn)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation (dry-run contract).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.jnp_dtype
+    i32 = jnp.int32
+
+    def st(shp, dtype):
+        return jax.ShapeDtypeStruct(shp, dtype)
+
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = st((b, s), i32)
+        specs["labels"] = st((b, s), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = st((b, s), i32)
+    else:  # decode: one new token against a KV cache of length s
+        specs["tokens"] = st((b, 1), i32)
+        specs["pos"] = st((), i32)
+
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = st((b, cfg.num_vision_tokens, cfg.d_model), dt)
+    if cfg.family == "audio":
+        # stubbed conv frontend: precomputed frame embeddings
+        specs["frame_embeds"] = st((b, cfg.encoder_seq, cfg.d_model), dt)
+    return specs

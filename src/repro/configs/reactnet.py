@@ -1,0 +1,3 @@
+"""ReActNet-A (the paper's own model) — see repro.models.reactnet."""
+
+from repro.models.reactnet import CONFIG  # noqa: F401

@@ -1,0 +1,55 @@
+"""Binarisation with straight-through estimators (paper Eq. 1, ReActNet [1]).
+
+Training keeps full-precision *latent* weights; the forward pass sees
+sign(w) (optionally scaled by the per-output-channel mean magnitude, the
+XNOR-Net scaling ReActNet inherits).  Gradients flow straight through with
+the usual |x| <= 1 clip on activations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def ste_sign(x: jax.Array) -> jax.Array:
+    """sign(x) in {-1, +1} with straight-through gradient (clip at |x|<=1)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _ste_fwd(x):
+    return ste_sign(x), x
+
+
+def _ste_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign.defvjp(_ste_fwd, _ste_bwd)
+
+
+def binarize_weights(w: jax.Array, scale: bool = True) -> jax.Array:
+    """Latent fp weights -> {-a, +a} with per-output-channel scale a=mean|w|.
+
+    The leading axis is the output-channel axis (Cout for convs, N for GEMM).
+    The scale multiplies *outside* the binary core so the xnor-popcount path
+    stays 1-bit; gradients reach the latent weights via STE.
+    """
+    wb = ste_sign(w)
+    if not scale:
+        return wb
+    reduce_axes = tuple(range(1, w.ndim))
+    alpha = jnp.mean(jnp.abs(jax.lax.stop_gradient(w)),
+                     axis=reduce_axes, keepdims=True)
+    return wb * alpha
+
+
+def binarize_activations(x: jax.Array) -> jax.Array:
+    """RSign without the learned shift (the shift lives in the model layer)."""
+    return ste_sign(x)
+
+
+def weight_bits(w: jax.Array) -> jax.Array:
+    """{0,1} uint8 view of latent weights (1 <-> +1), for offline compression."""
+    return (w >= 0).astype(jnp.uint8)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: runtime activation binarisation + sequence-aligned
+packing.
+
+Completes the paper's datapath on-chip: activations are sign-binarised and
+channel-packed (the RSign + packing-unit input side of Fig. 6) without a
+round-trip of unpacked bits through HBM.  Output layout matches
+``bitpack.pack_gemm_operand`` / ``ref.binarize_pack``: per 288-element
+K-block, word j packs bit j of 32 consecutive 9-bit sequences.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitpack import BLOCK_K
+
+
+def _kernel(x_ref, out_ref):
+    x = x_ref[...]                                   # (bm, 288)
+    bm = x.shape[0]
+    bits = (x >= 0).astype(jnp.uint32).reshape(bm, 32, 9)
+    lanes = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    out_ref[:, 0, :] = (bits << lanes).sum(1, dtype=jnp.uint32)  # (bm, 9)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def binarize_pack(x: jax.Array, *, bm: int = 512,
+                  interpret: bool = False) -> jax.Array:
+    """(M, K) real -> (M, ceil(K/288), 9) uint32 packed sign bits.
+
+    K is zero-padded (-1s) to a whole number of 288-bit blocks; the
+    contraction kernels correct for the padding via k_true.
+    """
+    m, k = x.shape
+    kp = -(-k // BLOCK_K) * BLOCK_K
+    bm = min(bm, m)
+    mp = -(-m // bm) * bm
+    # pad with -1 so padded positions binarise to bit 0
+    x = jnp.pad(x, ((0, mp - m), (0, kp - k)), constant_values=-1.0)
+    g = kp // BLOCK_K
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // bm, g),
+        in_specs=[pl.BlockSpec((bm, BLOCK_K), lambda mi, gi: (mi, gi))],
+        out_specs=pl.BlockSpec((bm, 1, 9), lambda mi, gi: (mi, gi, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, g, 9), jnp.uint32),
+        interpret=interpret,
+    )(x)
+    return out[:m]

@@ -1,0 +1,166 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are allclose-tested against
+(tests/test_kernels.py sweeps shapes & dtypes).  They are also the CPU
+fallback path used by the models when ``use_pallas=False``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitpack import BLOCK_K, SEQ_BITS, SEQS_PER_BLOCK
+
+# decode-table geometry (mirrors repro.core.huffman)
+_NODE_BASE = (0, 32, 96)        # flat offsets of node tables 0/1/2
+_TABLE_SIZE = 160
+
+
+# ---------------------------------------------------------------------------
+# packing (runtime jnp mirror of bitpack.pack_gemm_operand)
+# ---------------------------------------------------------------------------
+
+def pack_bits_runtime(bits: jax.Array) -> jax.Array:
+    """(M, K) {0,1} -> (M, G, 9) uint32 sequence-aligned packed words.
+
+    K is zero-padded (-1s) to a whole number of 288-bit blocks;
+    :func:`popcount_dot` corrects for the padding.
+    """
+    m, k = bits.shape
+    kp = -(-k // BLOCK_K) * BLOCK_K
+    bits = jnp.pad(bits.astype(jnp.uint32), ((0, 0), (0, kp - k)))
+    blocks = bits.reshape(m, kp // BLOCK_K, SEQS_PER_BLOCK, SEQ_BITS)
+    blocks = jnp.swapaxes(blocks, -1, -2)            # (M, G, 9, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)        # bit i = sequence i
+    return (blocks << shifts).sum(-1, dtype=jnp.uint32)
+
+
+def binarize_pack(x: jax.Array) -> jax.Array:
+    """(M, K) real -> packed sign bits (1 <-> x >= 0)."""
+    return pack_bits_runtime((x >= 0).astype(jnp.uint32))
+
+
+def pack_sequences(seqs: jax.Array) -> jax.Array:
+    """(N, G) int sequences -> (N, G, 9) uint32 packed words.
+
+    Inverse-free repack used after Huffman decode: word j of block g packs bit
+    j (MSB-first: bit 8-j of the 9-bit value) of 32 consecutive sequences.
+    G must be a multiple of 32.
+    """
+    n, g = seqs.shape
+    assert g % SEQS_PER_BLOCK == 0, g
+    s = seqs.astype(jnp.uint32).reshape(n, g // SEQS_PER_BLOCK, SEQS_PER_BLOCK)
+    taps = jnp.arange(SEQ_BITS, dtype=jnp.uint32)    # j: tap index, MSB first
+    bits = (s[:, :, None, :] >> (SEQ_BITS - 1 - taps)[None, None, :, None]) & 1
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (bits << shifts).sum(-1, dtype=jnp.uint32)   # (N, G', 9)
+
+
+# ---------------------------------------------------------------------------
+# binary contraction (xnor + popcount GEMM)
+# ---------------------------------------------------------------------------
+
+def popcount_dot(x_words: jax.Array, w_words: jax.Array, k_true: int) -> jax.Array:
+    """(M, G, 9) x (N, G, 9) packed words -> (M, N) int32 +-1 dot product.
+
+    dot = 2 * true_matches - k_true, where padded positions (0 in both
+    operands) are subtracted from the raw xnor-popcount match count.
+    """
+    xw = x_words.reshape(x_words.shape[0], -1)
+    ww = w_words.reshape(w_words.shape[0], -1)
+    xnor = ~(xw[:, None, :] ^ ww[None, :, :])
+    matches = jax.lax.population_count(xnor).sum(-1).astype(jnp.int32)
+    n_pad = xw.shape[-1] * 32 - k_true
+    return 2 * (matches - n_pad) - k_true
+
+
+def binary_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Reference binary GEMM on real inputs: sign(x) @ sign(w).T  -> (M, N)."""
+    xs = jnp.where(x >= 0, 1.0, -1.0)
+    ws = jnp.where(w >= 0, 1.0, -1.0)
+    return (xs @ ws.T).astype(jnp.float32)
+
+
+def binary_conv3x3(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Reference BNN 3x3 conv, NHWC x (Cout, Cin, 3, 3), padding = -1 (SAME).
+
+    Inputs are real; signs are taken inside (1 <-> >= 0).  Matches the packed
+    pipeline in ops.binary_conv3x3.
+    """
+    xs = jnp.where(x >= 0, 1.0, -1.0)
+    ws = jnp.where(w >= 0, 1.0, -1.0)
+    xs = jnp.pad(xs, ((0, 0), (1, 1), (1, 1), (0, 0)), constant_values=-1.0)
+    out = jax.lax.conv_general_dilated(
+        xs, jnp.transpose(ws, (2, 3, 1, 0)),       # HWIO
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# tiled Huffman decode (oracle for kernels/huffman_decode.py)
+# ---------------------------------------------------------------------------
+
+def decode_tile(words: jax.Array, tables_flat: jax.Array, c: int) -> jax.Array:
+    """Decode one tile: (W, S) uint32 words -> (C, S) int32 sequences.
+
+    Vectorised over the S substream lanes; the sequential chain is only the
+    per-lane bit cursor (scan over C code steps).  Mirrors the simplified
+    4-node coder: prefixes 0/10/110/111, code lengths 6/8/9/12, node 3 =
+    escape (raw 9 bits).
+    """
+    w_rows, s = words.shape
+    tables = tables_flat.astype(jnp.int32)
+
+    def step(bitpos, _):
+        word_idx = bitpos >> 5
+        bit_off = bitpos & 31
+        # one-hot gather of words[word_idx, lane] and the following word
+        rows = jnp.arange(w_rows, dtype=jnp.int32)[:, None]
+        w0 = jnp.sum(jnp.where(rows == word_idx[None, :], words, 0),
+                     axis=0, dtype=jnp.uint32)
+        nidx = jnp.minimum(word_idx + 1, w_rows - 1)
+        w1 = jnp.sum(jnp.where(rows == nidx[None, :], words, 0),
+                     axis=0, dtype=jnp.uint32)
+        off = bit_off.astype(jnp.uint32)
+        lo = jnp.where(off > 0, w1 >> (32 - jnp.maximum(off, 1)), 0)
+        window = ((w0 << off) | lo) >> 20               # top 12 bits
+        top3 = window >> 9
+        is0 = top3 < 4
+        is1 = (top3 >> 1) == 2
+        is2 = top3 == 6
+        is3 = top3 == 7
+        flat_idx = jnp.where(
+            is0, (window >> 6) & 31,
+            jnp.where(is1, 32 + ((window >> 4) & 63), 96 + ((window >> 3) & 63)),
+        ).astype(jnp.int32)
+        # one-hot table gather (160 entries)
+        tidx = jnp.arange(_TABLE_SIZE, dtype=jnp.int32)[:, None]
+        tval = jnp.sum(jnp.where(tidx == flat_idx[None, :], tables[:, None], 0),
+                       axis=0)
+        val = jnp.where(is3, (window & 511).astype(jnp.int32), tval)
+        length = jnp.where(is0, 6, jnp.where(is1, 8, jnp.where(is2, 9, 12)))
+        return bitpos + length.astype(jnp.int32), val
+
+    _, vals = jax.lax.scan(step, jnp.zeros(s, jnp.int32), None, length=c)
+    return vals                                        # (C, S)
+
+
+def decode_tiled(words: jax.Array, tables_flat: jax.Array, c: int) -> jax.Array:
+    """(T, W, S) -> (T, C, S) int32 sequences (vmap over tiles)."""
+    return jax.vmap(lambda wt: decode_tile(wt, tables_flat, c))(words)
+
+
+def tiled_to_sequences(decoded: jax.Array, n_seqs: int) -> jax.Array:
+    """(T, C, S) decode output -> flat (n_seqs,) in original order."""
+    t, c, s = decoded.shape
+    flat = decoded.reshape(t * c, s).reshape(-1)       # index = (t*C + c)*S + s
+    return flat[:n_seqs]
+
+
+def np_tables(assign) -> np.ndarray:
+    """Convenience: NodeAssignment -> (160,) int32 flat decode tables."""
+    return assign.decode_tables_flat()

@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before jax initialises devices (contract in
+# the brief): the dry-run — and only the dry-run — sees 512 host devices.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * jit(step).lower(**ShapeDtypeStructs).compile() must succeed on the
+    single-pod 16x16 mesh and the 2x16x16 multi-pod mesh;
+  * per cell we record memory_analysis(), cost_analysis() and the
+    collective-op byte census parsed from the optimised HLO — the roofline
+    harness (benchmarks/roofline.py) consumes these artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k --mesh single          # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+# NOTE: no `from __future__ import annotations` here — the XLA_FLAGS lines
+# must be the first statements of the module (jax locks device count on
+# first init), and future-imports may not follow them.
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import base as cfgs
+from repro.dist import sharding as shd
+from repro.launch import steps as steps_mod
+from repro.launch.hlo_census import HloCensus
+from repro.launch.mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def model_flops(cfg, shape: cfgs.ShapeConfig) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-training-FLOPs yardstick.
+
+    For serve cells (no backward) the yardstick is 2*N*D.
+    """
+    api_params = jax.eval_shape(
+        functools.partial(_init_for(cfg), cfg), jax.random.PRNGKey(0))
+    total = sum(x.size for x in jax.tree_util.tree_leaves(api_params))
+    n_active = total
+    if cfg.num_experts:
+        # subtract inactive routed-expert params
+        f = cfg.moe_d_ff or cfg.d_ff
+        per_expert = 3 * cfg.d_model * f
+        layers_moe = sum(1 for k in cfg.layer_kinds if k in
+                         ("swa_moe", "mla_moe", "moe"))
+        n_active = total - layers_moe * per_expert * (cfg.num_experts
+                                                      - cfg.top_k)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens, total, n_active
+
+
+def _init_for(cfg):
+    from repro.models.api import get_model
+    return get_model(cfg).init_params
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Build + lower + compile one cell; returns the artifact dict."""
+    cfg = cfgs.get_config(arch)
+    shape = cfgs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = cfgs.input_specs(cfg, shape)
+    t0 = time.monotonic()
+
+    with shd.use_mesh(mesh):
+        if shape.kind == "train":
+            (p_sds, p_shard), (o_sds, o_shard) = steps_mod.train_state_specs(
+                cfg, mesh, fsdp=True)
+            state_sds = {"params": p_sds, "opt": o_sds}
+            jit_step, _ = steps_mod.build_train_step(
+                cfg, mesh, donate=False, batch_sds=specs)
+            lowered = jit_step.lower(state_sds, specs)
+        else:
+            prefill_jit, decode_jit, (p_sds, _), (c_sds, _) = \
+                steps_mod.build_serve_steps(cfg, mesh, shape.global_batch,
+                                            shape.seq_len)
+            if shape.kind == "prefill":
+                extra = []
+                if cfg.family == "vlm":
+                    extra = [specs["vision_embeds"]]
+                if cfg.family == "audio":
+                    extra = [specs["frame_embeds"]]
+                lowered = prefill_jit.lower(p_sds, specs["tokens"], c_sds,
+                                            *extra)
+            else:
+                lowered = decode_jit.lower(p_sds, c_sds, specs["tokens"],
+                                           specs["pos"])
+        compiled = lowered.compile()
+
+    t_compile = time.monotonic() - t0
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    census = HloCensus(hlo)
+    coll = census.collective_bytes()
+    mf, n_total, n_active = model_flops(cfg, shape)
+
+    art = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "compile_s": round(t_compile, 1),
+        # trip-weighted HLO census (per device, per step) — cost_analysis
+        # counts while bodies once, so it is recorded only as *_raw
+        "flops": census.flops(),
+        "bytes_accessed": census.hbm_bytes("tpu"),
+        "bytes_accessed_cpu_granularity": census.hbm_bytes("cpu"),
+        "flops_raw_costanalysis": float(cost.get("flops", -1)),
+        "bytes_raw_costanalysis": float(cost.get("bytes accessed", -1)),
+        "collectives": coll,
+        "model_flops": mf,
+        "params_total": int(n_total),
+        "params_active": int(n_active),
+        "memory": {
+            k: getattr(mem, k)
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if mem is not None and hasattr(mem, k)
+        },
+        "hlo_bytes": len(hlo),
+    }
+    return art
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             save_hlo: bool = False) -> dict:
+    mesh_tag = "multi" if multi_pod else "single"
+    name = f"{arch}__{shape_name}__{mesh_tag}"
+    runnable, why = cfgs.cell_is_runnable(arch, shape_name)
+    if not runnable:
+        art = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": why}
+        print(f"[dryrun] {name}: {why}")
+    else:
+        try:
+            art = lower_cell(arch, shape_name, multi_pod)
+            art["status"] = "ok"
+            print(f"[dryrun] {name}: OK  compile={art['compile_s']}s  "
+                  f"GFLOPs={art['flops']/1e9:.1f}  "
+                  f"coll={art['collectives']['total']/1e9:.3f}GB")
+        except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+            art = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                   "status": f"FAIL: {type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"[dryrun] {name}: FAILED — {e}")
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, name + ".json"), "w") as f:
+        json.dump(art, f, indent=1)
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=cfgs.ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(cfgs.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    archs = cfgs.ARCH_NAMES if args.all or not args.arch else [args.arch]
+    shapes = list(cfgs.SHAPES) if args.all or not args.shape else [args.shape]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, mp, args.out))
+    bad = [r for r in results
+           if r["status"] not in ("ok",) and "skip" not in r["status"]]
+    print(f"[dryrun] {len(results)} cells, {len(bad)} failures")
+    raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

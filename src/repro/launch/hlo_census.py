@@ -1,0 +1,322 @@
+"""Trip-weighted census of scheduled HLO: FLOPs, HBM traffic, collectives.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` (lax.scan)
+body ONCE regardless of trip count (verified experimentally — a x8 scanned
+matmul reports 1x flops).  Every model here scans over layers, so all
+roofline terms must be re-derived with loop weighting:
+
+  * parse the scheduled HLO into computations;
+  * build the call graph (while/fusion/call/conditional edges), weighting
+    while bodies by their trip count (largest constant compared in the
+    loop condition — all our loops are counted scans);
+  * FLOPs: every ``dot`` op contributes 2 * prod(result_shape) * K, with K
+    looked up from the lhs operand's shape via a module-wide symbol table
+    (operands are bare %names in scheduled HLO). Convolutions contribute
+    2 * prod(result) * prod(kernel_spatial) * Cin.
+  * HBM bytes: for ops at kernel granularity (i.e. in non-fusion execution
+    contexts), result bytes + operand bytes, skipping pure-aliasing ops
+    (bitcast, tuple, get-tuple-element, parameter).  This approximates each
+    scheduled top-level op as one kernel — the same granularity XLA's own
+    cost model uses on the scheduled module.
+  * collectives: operand bytes per op kind (see dryrun._line_collective).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3|s64|s32|s16|s8|u64|u32|"
+                       r"u16|u8|pred|c64|c128)\[([\d,]*)\]")
+
+_ALIAS_OPS = {"bitcast", "tuple", "get-tuple-element", "parameter",
+              "constant", "after-all", "iota"}
+
+# ops a TPU fusion absorbs into its producer/consumer — counting their
+# operands+results as HBM traffic models XLA:CPU's (non-)fusion, not the
+# TPU target.  hbm_bytes(mode="tpu") skips them.
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "tanh", "negate", "abs",
+    "and", "or", "xor", "not", "select", "compare", "convert", "rsqrt",
+    "sqrt", "power", "sine", "cosine", "log", "log-plus-one", "clamp",
+    "floor", "ceil", "round-nearest-even", "round-nearest-afz", "sign",
+    "is-finite", "reduce-precision", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "population-count", "remainder", "atan2",
+    "expm1", "log1p", "copy", "pad", "reverse", "concatenate",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(m: re.Match) -> tuple[int, ...]:
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+def _bytes_of(m: re.Match) -> int:
+    n = 1
+    for d in _dims(m):
+        n *= d
+    return n * _DTYPE_BYTES[m.group(1)]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    op: str
+    line: str
+    result_shapes: list[re.Match]
+    operands: list[str]
+
+
+def _parse_instruction(line: str) -> Instruction | None:
+    ls = line.strip()
+    m = re.match(r"(?:ROOT )?%?([\w.\-]+) = (.*)$", ls)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    om = re.search(r"\b([a-z][a-z0-9\-]*)\(", rest)
+    if not om:
+        return None
+    op = om.group(1)
+    head = rest[:om.start()]
+    result_shapes = list(_SHAPE_RE.finditer(head))
+    args = rest[om.end():]
+    depth = 1
+    end = 0
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = re.findall(r"%([\w.\-]+)", args[:end])
+    return Instruction(name, op, ls, result_shapes, operands)
+
+
+class HloCensus:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[Instruction]] = {}
+        self.symbols: dict[str, list[re.Match]] = {}
+        cur = None
+        for line in hlo_text.splitlines():
+            is_header = (line and not line[0].isspace() and "->" in line
+                         and line.rstrip().endswith("{"))
+            if is_header:
+                hm = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+                cur = hm.group(1) if hm else None
+                if cur:
+                    self.comps[cur] = []
+                continue
+            if cur is None:
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            inst = _parse_instruction(line)
+            if inst:
+                self.comps[cur].append(inst)
+                self.symbols[inst.name] = inst.result_shapes
+        self._weights = self._compute_weights()
+
+    # -- call graph / loop weights ------------------------------------------
+    def _trip_count(self, cond: str) -> int:
+        best = 1
+        for inst in self.comps.get(cond, []):
+            for m in re.finditer(r"constant\((\d+)\)", inst.line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def _edges(self, inst: Instruction) -> list[tuple[str, int]]:
+        """(callee computation, weight multiplier) pairs of one instruction."""
+        edges: list[tuple[str, int]] = []
+        bm = re.search(r"body=%?([\w.\-]+)", inst.line)
+        if bm:
+            trip = 1
+            km = re.search(r'known_trip_count[^}]*"n":"(\d+)"', inst.line)
+            if km:
+                trip = int(km.group(1))
+            else:
+                cm = re.search(r"condition=%?([\w.\-]+)", inst.line)
+                if cm:
+                    trip = self._trip_count(cm.group(1))
+            edges.append((bm.group(1), trip))
+        cm = re.search(r"condition=%?([\w.\-]+)", inst.line)
+        if cm:
+            edges.append((cm.group(1), 1))
+        for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", inst.line):
+            edges.append((m.group(1), 1))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", inst.line)
+        if bm:
+            for t in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                edges.append((t, 1))
+        return edges
+
+    def _compute_weights(self) -> dict[str, int]:
+        entry = next((n for n in self.comps if n.startswith("main")
+                      or "entry" in n.lower()), None)
+        if entry is None:  # fall back: computation with most instructions
+            entry = max(self.comps, key=lambda n: len(self.comps[n]))
+        weights = {entry: 1}
+        changed = True
+        guard = 0
+        while changed and guard < 50:
+            changed = False
+            guard += 1
+            for cname, insts in self.comps.items():
+                w = weights.get(cname)
+                if w is None:
+                    continue
+                for inst in insts:
+                    for target, mult in self._edges(inst):
+                        if target in self.comps:
+                            nw = w * mult
+                            if weights.get(target, 0) < nw:
+                                weights[target] = nw
+                                changed = True
+        return weights
+
+    def _op_k(self, inst: Instruction) -> int:
+        """contraction size of a dot from its lhs operand + contracting dims"""
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]+)\}", inst.line)
+        if not cm or not inst.operands:
+            return 0
+        lhs = self.symbols.get(inst.operands[0])
+        if not lhs:
+            return 0
+        dims = _dims(lhs[0])
+        k = 1
+        for d in cm.group(1).split(","):
+            if int(d) < len(dims):
+                k *= dims[int(d)]
+        return k
+
+    # -- public counts --------------------------------------------------------
+    def flops(self) -> float:
+        total = 0.0
+        for cname, insts in self.comps.items():
+            w = self._weights.get(cname, 0)
+            if not w:
+                continue
+            for inst in insts:
+                if inst.op == "dot" and inst.result_shapes:
+                    out = 1
+                    for d in _dims(inst.result_shapes[0]):
+                        out *= d
+                    total += w * 2.0 * out * max(self._op_k(inst), 1)
+                elif inst.op == "convolution" and inst.result_shapes:
+                    out = 1
+                    for d in _dims(inst.result_shapes[0]):
+                        out *= d
+                    wm = re.search(r"window=\{size=([\dx]+)", inst.line)
+                    ksz = 1
+                    if wm:
+                        for d in wm.group(1).split("x"):
+                            ksz *= int(d)
+                    cin = 1
+                    if inst.operands and len(inst.operands) > 1:
+                        rhs = self.symbols.get(inst.operands[1])
+                        if rhs:
+                            rd = _dims(rhs[0])
+                            cin = rd[-2] if len(rd) >= 2 else 1
+                    total += w * 2.0 * out * ksz * cin
+        return total
+
+    def hbm_bytes(self, mode: str = "tpu") -> float:
+        """Approximate HBM traffic: result+operand bytes of every scheduled
+        top-level op (fusion internals excluded — the fusion op itself is
+        the kernel).
+
+        mode="cpu": every scheduled op is a kernel (XLA:CPU granularity —
+        an upper bound).  mode="tpu" (default): elementwise/layout ops are
+        assumed fused into their consumers, approximating the TPU target's
+        fusion behaviour; dots/reduces/data-movement still count.
+
+        Ops that touch only a window of their operands are modelled by the
+        window, not the full buffer: dynamic-slice/gather read ~result-sized
+        data; dynamic-update-slice writes ~update-sized data; while/call/
+        conditional are control flow (their bodies are counted separately);
+        the loop-carried tuple is NOT re-counted per iteration.
+        """
+        fusion_comps = set()
+        for insts in self.comps.values():
+            for inst in insts:
+                if inst.op == "fusion":
+                    for m in re.finditer(r"calls=%?([\w.\-]+)", inst.line):
+                        fusion_comps.add(m.group(1))
+        skip = _ALIAS_OPS | {"while", "call", "conditional", "custom-call"}
+        if mode == "tpu":
+            skip = skip | _ELEMENTWISE
+        total = 0.0
+        for cname, insts in self.comps.items():
+            w = self._weights.get(cname, 0)
+            if not w or cname in fusion_comps:
+                continue
+            for inst in insts:
+                if inst.op in skip:
+                    continue
+                res = sum(_bytes_of(m) for m in inst.result_shapes)
+                if inst.op in ("dynamic-slice", "gather", "broadcast",
+                               "reshape", "slice"):
+                    nbytes = 2 * res              # read window + write result
+                elif inst.op == "dynamic-update-slice":
+                    upd = 0
+                    if len(inst.operands) > 1:
+                        shapes = self.symbols.get(inst.operands[1])
+                        if shapes:
+                            upd = sum(_bytes_of(m) for m in shapes)
+                    nbytes = 2 * upd              # read update + write window
+                elif inst.op in ("scatter", "scatter-add"):
+                    upd = 0
+                    if len(inst.operands) > 2:
+                        shapes = self.symbols.get(inst.operands[2])
+                        if shapes:
+                            upd = sum(_bytes_of(m) for m in shapes)
+                    nbytes = 2 * upd
+                else:
+                    nbytes = res
+                    for o in inst.operands:
+                        shapes = self.symbols.get(o)
+                        if shapes:
+                            nbytes += sum(_bytes_of(m) for m in shapes)
+                total += w * nbytes
+        return total
+
+    def collective_bytes(self) -> dict[str, float]:
+        out = {k: 0.0 for k in _COLLECTIVES}
+        out["count"] = 0
+        for cname, insts in self.comps.items():
+            w = self._weights.get(cname, 0)
+            if not w:
+                continue
+            for inst in insts:
+                kind = inst.op.replace("-start", "")
+                if kind not in _COLLECTIVES:
+                    continue
+                nbytes = sum(_bytes_of(m) for m in inst.result_shapes)
+                if kind == "all-gather":
+                    nbytes //= max(self._group_size(inst.line), 1)
+                elif kind == "reduce-scatter":
+                    nbytes *= max(self._group_size(inst.line), 1)
+                out[kind] += w * nbytes
+                out["count"] += 1
+        out["total"] = sum(out[k] for k in _COLLECTIVES)
+        return out
+
+    @staticmethod
+    def _group_size(line: str) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+        if m:
+            return len(m.group(1).split(","))
+        return 1

@@ -1,0 +1,45 @@
+"""Family-dispatched model API: one entry point per step kind.
+
+``get_model(cfg)`` returns a small namespace with uniform signatures so the
+launcher / dry-run never branches on families.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init_params: Callable[..., Any]
+    loss_fn: Callable[..., Any]              # (cfg, params, batch) -> loss
+    forward: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]          # (cfg, params, cache, tok, pos)
+    init_cache_specs: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def get_model(cfg) -> ModelAPI:
+    if cfg.family == "audio":
+        return ModelAPI(
+            init_params=encdec.init_params,
+            loss_fn=encdec.loss_fn,
+            forward=encdec.forward,
+            prefill=encdec.prefill,
+            decode_step=encdec.decode_step,
+            init_cache_specs=encdec.init_cache_specs,
+            init_cache=encdec.init_cache,
+        )
+    return ModelAPI(
+        init_params=transformer.init_params,
+        loss_fn=transformer.loss_fn,
+        forward=transformer.forward,
+        prefill=transformer.prefill,
+        decode_step=transformer.decode_step,
+        init_cache_specs=transformer.init_cache_specs,
+        init_cache=transformer.init_cache,
+    )

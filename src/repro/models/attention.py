@@ -1,0 +1,386 @@
+"""Attention substrate: flash-style chunked attention, GQA, sliding windows,
+prefix-LM masks, logit softcaps, KV caches (full + rolling-window), and
+DeepSeek-style MLA with latent-space decode.
+
+Memory discipline: training/prefill attention never materialises an (Sq, Sk)
+score matrix — it runs an online-softmax scan over (q_chunk, kv_chunk) tiles,
+so activation memory is linear in sequence length (required for the 32k
+prefill cells and scan-over-layers remat).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain, seq_shard_attention
+from repro.models.layers import apply_rope, dense_init, rms_norm, softcap
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def _allowed(q_pos, k_pos, *, causal: bool, window: int, prefix_len: int):
+    """Boolean mask (..., Sq, Sk) of attendable pairs."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    ok = (k <= q) if causal else jnp.ones(jnp.broadcast_shapes(
+        q.shape, k.shape), bool)
+    if window:
+        ok &= k > q - window
+    if prefix_len:
+        ok |= k < prefix_len
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# flash attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "prefix_len", "attn_softcap",
+                     "q_chunk", "kv_chunk"))
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, KH, D)
+    v: jax.Array,            # (B, Sk, KH, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    attn_softcap: float = 0.0,
+    q_offset: int = 0,
+    q_chunk: int = 4096,
+    kv_chunk: int = 0,       # kept for API compat; kv is processed densely
+) -> jax.Array:
+    """Memory-chunked attention: lax.scan over q chunks, dense over kv.
+
+    Design note (EXPERIMENTS.md §Perf iter 2): an inner kv-chunk scan makes
+    the backward emit a dK/dV all-reduce *per kv chunk per q chunk* when q
+    is sequence-sharded and k/v replicated (measured 112 GB/step on gemma2
+    train_4k).  With kv dense inside the q-scan, dK/dV accumulate in the
+    scan carry locally and are reduced once per layer (~1.7 GB/step).  The
+    (cq, Sk) score block is transient and recomputed under remat.
+    """
+    b, sq, h, d = q.shape
+    sk, kh, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // kh
+    q_chunk = math.gcd(sq, q_chunk)        # largest common divisor <= chunk
+
+    nq = sq // q_chunk
+    # scores/PV run on the MXU in the model dtype with f32 accumulation;
+    # only the softmax statistics stay f32 (halves attention bytes & flops
+    # vs an all-f32 flash — §Perf iter 5)
+    qs = (q * jnp.asarray(d ** -0.5, q.dtype)).reshape(
+        b, nq, q_chunk, kh, g, d)
+    qs = jnp.moveaxis(qs, 1, 0)                       # (nq, B, cq, KH, G, D)
+    # Attention sharding over the "model" axis (DESIGN.md §4): shard KV
+    # heads when they divide the axis (MLA's 128 heads), else shard the q
+    # rows (GQA archs with 1-10 kv heads).  Without an explicit constraint
+    # GSPMD replicates the whole score block on every model rank (measured:
+    # 16x redundant attention FLOPs on the 16x16 mesh).
+    from repro.dist.sharding import current_mesh
+    mesh = current_mesh()
+    head_tp = mesh is not None and "model" in mesh.axis_names and \
+        kh % mesh.shape.get("model", 1) == 0
+    if head_tp:
+        qs = constrain(qs, None, "batch", None, "model", None, None)
+    else:
+        qs = constrain(qs, None, "batch", "model", None, None, None)
+    k_pos = jnp.arange(sk)
+
+    def q_step(_, qx):
+        qc, qi = qx
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        if head_tp:
+            qc = constrain(qc, "batch", None, "model", None, None)
+        else:
+            qc = constrain(qc, "batch", "model", None, None, None)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, k,
+                       preferred_element_type=jnp.float32)
+        if attn_softcap:
+            s = softcap(s, attn_softcap)
+        mask = _allowed(q_pos, k_pos, causal=causal, window=window,
+                        prefix_len=prefix_len)            # (cq, Sk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if head_tp:
+            s = constrain(s, "batch", "model", None, None, None)
+        else:
+            s = constrain(s, "batch", None, None, "model", None)
+        m = s.max(-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.sum(-1, keepdims=True)
+        out = jnp.einsum("bhgqk,bkhd->bhgqd",
+                         (p / jnp.maximum(l, 1e-20)).astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        if head_tp:
+            out = constrain(out, "batch", "model", None, None, None)
+        else:
+            out = constrain(out, "batch", None, None, "model", None)
+        return None, out                                  # (B, KH, G, cq, Dv)
+
+    if nq == 1:
+        # dense path: one score block per layer -> dK/dV reduce ONCE per
+        # layer instead of once per scan step (the scan form psums the
+        # replicated-K cotangent on every iteration; measured 223 GB/step)
+        _, out1 = q_step(None, (qs[0], jnp.zeros((), jnp.int32)))
+        outs = out1[None]
+    else:
+        # remat each q chunk: the (cq, Sk) score block would otherwise be
+        # saved per scan step for the backward (nq x 0.5 GB of residuals)
+        _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
+                               (qs, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1)                        # (B, nq, KH, G, cq, Dv)
+    out = jnp.moveaxis(out, -2, 2)                        # (B, nq, cq, KH, G, Dv)
+    return out.reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# decode attention over a cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, D)
+    k_cache: jax.Array,      # (B, Smax, KH, D)
+    v_cache: jax.Array,      # (B, Smax, KH, Dv)
+    cur_pos: jax.Array,      # scalar: position of the current token
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    rolling: bool = False,
+) -> jax.Array:
+    b, smax, kh, d = k_cache.shape
+    h = q.shape[2]
+    g = h // kh
+    qs = (q.astype(jnp.float32) * d ** -0.5).reshape(b, kh, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qs, k_cache.astype(jnp.float32))
+    if attn_softcap:
+        s = softcap(s, attn_softcap)
+    slot = jnp.arange(smax)
+    if rolling:
+        # rolling window cache: slots hold the last min(cur_pos+1, Smax) keys
+        valid = slot < jnp.minimum(cur_pos + 1, smax)
+    else:
+        valid = slot <= cur_pos
+        if window:
+            valid &= slot > cur_pos - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, v_cache.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# standard GQA attention layer (init / train / prefill+cache / decode)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, h * hd, dtype),
+        "wk": dense_init(kk, d, kh * hd, dtype),
+        "wv": dense_init(kv, d, kh * hd, dtype),
+        "wo": dense_init(ko, h * hd, d, dtype),
+    }
+
+
+def _qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kh, hd)
+    v = (x @ p["wv"]).reshape(b, s, kh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(
+    p: dict, x: jax.Array, cfg, *,
+    kind: str,                       # "attn" | "swa" | "local" | "global" | "bidir"
+    cache: dict | None = None,       # None = train; dict = prefill/decode
+    pos=None,                        # decode: scalar current position
+    prefix_len: int = 0,
+) -> tuple[jax.Array, dict | None]:
+    b, s, _ = x.shape
+    window = cfg.window if kind in ("swa", "local") else 0
+    causal = kind != "bidir"
+    decode = cache is not None and s == 1
+
+    if decode:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q, k, v = _qkv(p, x, cfg, positions)
+        rolling = bool(window)
+        if rolling:
+            slot = pos % cache["k"].shape[1]
+        else:
+            slot = pos
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        out = decode_attention(q, k_cache, v_cache, pos, window=window,
+                               attn_softcap=cfg.attn_logit_softcap,
+                               rolling=rolling)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        positions = jnp.arange(s)[None, :]
+        q, k, v = _qkv(p, x, cfg, positions)
+        q, k, v = seq_shard_attention(q, k, v)   # SP layout (dist.sharding)
+        out = flash_attention(
+            q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+            attn_softcap=cfg.attn_logit_softcap)
+        out = constrain(out, "batch", "model", None, None)
+        new_cache = None
+        if cache is not None:                      # prefill: fill the cache
+            smax = cache["k"].shape[1]
+            if window and smax < s:                # rolling window cache:
+                # position p must land at slot p % smax for decode to append
+                shift = s % smax
+                k_keep = jnp.roll(k[:, -smax:], shift, axis=1)
+                v_keep = jnp.roll(v[:, -smax:], shift, axis=1)
+            else:
+                k_keep = jnp.pad(k, ((0, 0), (0, smax - min(s, smax)),
+                                     (0, 0), (0, 0)))[:, :smax]
+                v_keep = jnp.pad(v, ((0, 0), (0, smax - min(s, smax)),
+                                     (0, 0), (0, 0)))[:, :smax]
+            new_cache = {"k": k_keep.astype(cache["k"].dtype),
+                         "v": v_keep.astype(cache["v"].dtype)}
+    y = out.reshape(b, s, -1).astype(x.dtype) @ p["wo"]
+    return y, new_cache
+
+
+def attn_cache_spec(cfg, kind: str, batch: int, max_len: int):
+    """ShapeDtypeStructs of this layer kind's cache."""
+    window = cfg.window if kind in ("swa", "local") else 0
+    length = min(window, max_len) if window else max_len
+    shp = (batch, length, cfg.num_kv_heads, cfg.head_dim)
+    dt = cfg.jnp_dtype
+    return {"k": jax.ShapeDtypeStruct(shp, dt),
+            "v": jax.ShapeDtypeStruct(shp, dt)}
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype) -> dict:
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attn_apply(p, x, cfg, *, enc_kv=None, enc_out=None):
+    """enc_kv: precomputed {"k","v"} (prefill caches them); else compute from
+    enc_out."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    if enc_kv is None:
+        se = enc_out.shape[1]
+        k = (enc_out @ p["wk"]).reshape(b, se, kh, hd)
+        v = (enc_out @ p["wv"]).reshape(b, se, kh, hd)
+    else:
+        k, v = enc_kv["k"], enc_kv["v"]
+    out = flash_attention(q, k, v, causal=False)
+    return out.reshape(b, s, -1).astype(x.dtype) @ p["wo"], {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): latent KV compression, absorbed decode
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], d, r_q, dtype),
+        "q_norm": jnp.zeros((r_q,), dtype),
+        "w_uq": dense_init(ks[1], r_q, h * (dn + dr), dtype),
+        "w_dkv": dense_init(ks[2], d, r_kv + dr, dtype),
+        "kv_norm": jnp.zeros((r_kv,), dtype),
+        "w_uk": dense_init(ks[3], r_kv, h * dn, dtype),
+        "w_uv": dense_init(ks[4], r_kv, h * dv, dtype),
+        "wo": dense_init(ks[5], h * dv, d, dtype),
+    }
+
+
+def mla_apply(p, x, cfg, *, cache=None, pos=None):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    r_kv = cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    decode = cache is not None and s == 1
+    positions = (jnp.full((b, 1), pos, jnp.int32) if decode
+                 else jnp.arange(s)[None, :])
+
+    cq = rms_norm(p["q_norm"], x @ p["w_dq"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"]                                  # (B, S, r_kv + dr)
+    c_kv = rms_norm(p["kv_norm"], dkv[..., :r_kv], cfg.norm_eps)
+    k_pe = apply_rope(dkv[..., None, r_kv:], positions, cfg.rope_theta)[:, :, 0]
+
+    if decode:
+        c_cache = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        pe_cache = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, pos, 0))
+        # absorbed attention in latent space
+        w_uk = p["w_uk"].reshape(r_kv, h, dn)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))      # (B, 1, H, r_kv)
+        scale = (dn + dr) ** -0.5
+        s_lat = jnp.einsum("bshr,bkr->bhsk", q_lat,
+                           c_cache.astype(jnp.float32))
+        s_pe = jnp.einsum("bshd,bkd->bhsk", q_pe.astype(jnp.float32),
+                          pe_cache.astype(jnp.float32))
+        scores = (s_lat + s_pe) * scale
+        valid = jnp.arange(c_cache.shape[1]) <= pos
+        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhsk,bkr->bshr", probs,
+                         c_cache.astype(jnp.float32))     # (B, 1, H, r_kv)
+        w_uv = p["w_uv"].reshape(r_kv, h, dv)
+        out = jnp.einsum("bshr,rhv->bshv", ctx, w_uv.astype(jnp.float32))
+        new_cache = {"c_kv": c_cache, "k_pe": pe_cache}
+    else:
+        k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, dn)
+        v = (c_kv @ p["w_uv"]).reshape(b, s, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None], (b, s, h, dr))], -1)
+        q_full = jnp.concatenate([q_nope, q_pe], -1)
+        # MLA has 128 heads: head-TP divides the 16-wide model axis cleanly
+        q_full = constrain(q_full, "batch", None, "model", None)
+        k = constrain(k, "batch", None, "model", None)
+        v = constrain(v, "batch", None, "model", None)
+        out = flash_attention(q_full, k, v, causal=True)
+        out = constrain(out, "batch", None, "model", None)
+        new_cache = None
+        if cache is not None:
+            smax = cache["c_kv"].shape[1]
+            ck = jnp.pad(c_kv, ((0, 0), (0, smax - s), (0, 0)))
+            pk = jnp.pad(k_pe, ((0, 0), (0, smax - s), (0, 0)))
+            new_cache = {"c_kv": ck.astype(cache["c_kv"].dtype),
+                         "k_pe": pk.astype(cache["k_pe"].dtype)}
+    y = out.reshape(b, s, h * dv).astype(x.dtype) @ p["wo"]
+    return y, new_cache
+
+
+def mla_cache_spec(cfg, batch: int, max_len: int):
+    dt = cfg.jnp_dtype
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dt),
+        "k_pe": jax.ShapeDtypeStruct((batch, max_len, cfg.rope_head_dim), dt),
+    }

@@ -1,0 +1,122 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment brief the audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, Se, D); the encoder is the bidirectional
+transformer stack, the decoder is causal with cross-attention.  Positional
+encoding deviates from Whisper's sinusoids — the shared substrate's RoPE is
+used (documented in DESIGN.md; irrelevant to the systems claims).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import chunked_cross_entropy, embed_init, \
+    rms_norm, rms_norm_init, softcap
+from repro.models.transformer import _stack, block_apply, \
+    block_cache_spec, block_init, remat_wrap
+
+
+def init_params(cfg, key) -> dict:
+    dtype = cfg.jnp_dtype
+    k_embed, k_enc, k_dec, k_extra = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_scan": _stack([{"b0": block_init("bidir", cfg, k, dtype)}
+                            for k in enc_keys]),
+        "enc_norm": rms_norm_init(cfg.d_model, dtype),
+        "scan": _stack([{"b0": block_init("dec", cfg, k, dtype)}
+                        for k in dec_keys]),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+    }
+
+
+def encode(cfg, params, frame_embeds: jax.Array) -> jax.Array:
+    x = constrain(frame_embeds.astype(cfg.jnp_dtype), "batch", None, None)
+
+    def body(x, layer_params):
+        x, _, _ = block_apply("bidir", cfg, layer_params["b0"], x)
+        return constrain(x, "batch", None, None), None
+
+    body_fn = remat_wrap(cfg, body)
+    x, _ = jax.lax.scan(body_fn, x, params["enc_scan"])
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _decoder_hidden(cfg, params, tokens, frame_embeds):
+    enc_out = encode(cfg, params, frame_embeds)
+    x = constrain(params["embed"][tokens], "batch", "model", None)
+
+    def body(x, layer_params):
+        x, _, _ = block_apply("dec", cfg, layer_params["b0"], x,
+                              enc_out=enc_out)
+        return constrain(x, "batch", "model", None), None
+
+    body_fn = remat_wrap(cfg, body)
+    x, _ = jax.lax.scan(body_fn, x, params["scan"])
+    return rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg, params, tokens, frame_embeds):
+    """Training forward -> (logits, aux=0)."""
+    x = _decoder_hidden(cfg, params, tokens, frame_embeds)
+    logits = softcap((x @ params["embed"].T).astype(jnp.float32),
+                     cfg.final_logit_softcap)
+    return (constrain(logits, "batch", "model", None),
+            jnp.zeros((), jnp.float32))
+
+
+def loss_fn(cfg, params, batch) -> jax.Array:
+    hidden = _decoder_hidden(cfg, params, batch["tokens"],
+                             batch["frame_embeds"])
+    return chunked_cross_entropy(hidden, params["embed"].T, batch["labels"],
+                                 softcap_val=cfg.final_logit_softcap)
+
+
+def init_cache_specs(cfg, batch: int, max_len: int):
+    one = {"b0": block_cache_spec("dec", cfg, batch, max_len)}
+    return {"scan": jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_layers, *s.shape), s.dtype),
+        one)}
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  init_cache_specs(cfg, batch, max_len))
+
+
+def prefill(cfg, params, tokens, cache, frame_embeds):
+    enc_out = encode(cfg, params, frame_embeds)
+    x = constrain(params["embed"][tokens], "batch", None, None)
+
+    def body(x, xs):
+        layer_params, layer_cache = xs
+        x, nc, _ = block_apply("dec", cfg, layer_params["b0"], x,
+                               cache=layer_cache["b0"], enc_out=enc_out)
+        return x, {"b0": nc}
+
+    x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = softcap((x @ params["embed"].T).astype(jnp.float32),
+                     cfg.final_logit_softcap)
+    return logits, {"scan": scan_cache}
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    x = constrain(params["embed"][tokens], "batch", None, None)
+
+    def body(x, xs):
+        layer_params, layer_cache = xs
+        x, nc, _ = block_apply("dec", cfg, layer_params["b0"], x,
+                               cache=layer_cache["b0"], pos=pos)
+        return x, {"b0": nc}
+
+    x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = softcap((x @ params["embed"].T).astype(jnp.float32),
+                     cfg.final_logit_softcap)
+    return constrain(logits, "batch", None, "model"), {"scan": scan_cache}

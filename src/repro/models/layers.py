@@ -1,0 +1,147 @@
+"""Core layer substrate: init helpers, norms, RoPE, MLPs, embeddings.
+
+Functional style: params are plain pytrees (dicts); every layer is
+``f(params, x, ...) -> y``.  No framework dependency.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import binarize_weights
+from repro.kernels import ref as kref
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def linear(w: jax.Array, x: jax.Array) -> jax.Array:
+    return x @ w
+
+
+def binary_linear(w: jax.Array, x: jax.Array) -> jax.Array:
+    """BNN linear (paper-technique integration): sign(x) @ sign(w) * alpha.
+
+    Uses the STE binariser so the layer stays trainable; on TPU the packed
+    xnor/popcount kernel implements the same contraction (kernels.ops).
+    """
+    wb = binarize_weights(w.T).T          # per-output-channel scale
+    xb = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    return xb @ wb
+
+
+def rms_norm(g: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + g.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def rms_norm_init(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                            # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, d_model, dtype)}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, d_model, d_ff, dtype)
+        p["up"] = dense_init(k3, d_model, d_ff, dtype)
+    else:
+        p["up"] = dense_init(k1, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str,
+              binarized: bool = False) -> jax.Array:
+    lin = binary_linear if binarized else linear
+    if act == "swiglu":
+        return lin(p["down"], jax.nn.silu(lin(p["gate"], x)) * lin(p["up"], x))
+    if act == "geglu":
+        return lin(p["down"],
+                   jax.nn.gelu(lin(p["gate"], x), approximate=True)
+                   * lin(p["up"], x))
+    return lin(p["down"], jax.nn.gelu(lin(p["up"], x), approximate=True))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all positions. logits (..., V) f32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_cross_entropy(x: jax.Array, head: jax.Array, labels: jax.Array,
+                          *, softcap_val: float = 0.0,
+                          chunk: int = 256) -> jax.Array:
+    """CE of (x @ head) without materialising full (B, S, V) logits.
+
+    Scans over sequence chunks with per-chunk remat: live logits are one
+    (B, chunk, V) block; the head gradient accumulates across chunks.
+    (EXPERIMENTS.md §Perf iter 3 — the (B,S,V) block was the largest buffer
+    of every train cell: 6.3 GB/device on gemma2 train_4k.)
+    """
+    import math as _math
+    b, s, d = x.shape
+    chunk = _math.gcd(s, chunk)
+    nc = s // chunk
+    xs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    # NOTE (§Perf gemma2 iter G6, REFUTED): gathering the gold logit from
+    # the head (take(head.T, labels) + dot) instead of take_along_axis on
+    # the logits was predicted to remove the (B, chunk, V) scatter in the
+    # backward; measured WORSE (+0.2s memory term) — its backward scatters
+    # into the full (D, V) head per chunk instead.  Kept the logits gather.
+    def step(tot, inp):
+        xc, lc = inp
+        logits = (xc @ head).astype(jnp.float32)
+        logits = softcap(logits, softcap_val)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(step), jnp.zeros((), jnp.float32),
+                            (xs, ls))
+    return total / (b * s)

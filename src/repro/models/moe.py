@@ -1,0 +1,134 @@
+"""Mixture-of-Experts substrate (Mixtral top-2, DeepSeek-V2 shared+routed).
+
+Sort-based capacity-bounded dispatch (GShard/Switch style): tokens are sorted
+by expert id, packed into an (E, C, D) buffer (C = capacity), processed with
+one grouped einsum per projection, and combined back weighted by the router
+probability.  Compute is proportional to *active* parameters (top_k / E of
+the expert pool), which keeps HLO_FLOPs ~ 6·N_active·D — the roofline
+"useful compute" check in EXPERIMENTS.md depends on this.
+
+Expert sharding (DESIGN.md §5): the leading E axis of the expert weights is
+sharded over "model" when E divides the axis (DeepSeek: 160/16 = 10 experts
+per device, true EP); otherwise the d_ff axis is TP-sharded (Mixtral: 8
+experts < 16 shards).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": dense_init(k1, d, fs, dtype),
+            "up": dense_init(k2, d, fs, dtype),
+            "down": dense_init(k3, fs, d, dtype),
+        }
+    return p
+
+
+def _capacity(tokens: int, cfg) -> int:
+    c = -(-int(tokens * cfg.top_k * cfg.capacity_factor)
+          // cfg.num_experts)
+    # floor at top_k (a group must fit one token's own experts), round to 4
+    return max(cfg.top_k, -(-c // 4) * 4)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (out (B, S, D), aux load-balance loss scalar).
+
+    Hierarchical (per-sequence) dispatch — EXPERIMENTS.md §Perf deepseek
+    iteration D1.  The previous global argsort-based dispatch is
+    unsharddable (data-dependent global permutation): GSPMD replicated the
+    (T*k, D) gather/scatter buffers on every device and all-reduced the
+    full (E, C, D) expert output per layer (measured 28.7 TB collective
+    bytes/step on deepseek-v2 train_4k).  Here every data-dependent index
+    stays *within one sequence* (cumsum-of-one-hot positions, vmapped
+    row-local scatter/gather) and the combine scatter uses static indices,
+    so the batch axis stays DP-sharded end-to-end and the only model-axis
+    traffic is the (B, E, C, D) buffer resharding to expert-parallel
+    layout — the canonical MoE all-to-all, activation-sized.
+    """
+    b0, s0, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    # decode (s=1): per-row dispatch would pay the top_k capacity floor per
+    # token (measured 22x useful-FLOPs loss on mixtral decode_32k, §Perf
+    # iter D3) — regroup tokens across the batch so capacity is shared
+    if s0 == 1 and b0 > 1:
+        from repro.dist.sharding import _dp_size, current_mesh
+        mesh = current_mesh()
+        dp = _dp_size(mesh) if mesh is not None else 16
+        g = next((c for c in (dp, 16, 8, 4, 2) if b0 % c == 0), 1)
+        b, s = g, b0 // g
+        x = x.reshape(b, s, d)
+    else:
+        b, s = b0, s0
+    cap = _capacity(s, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, k)                      # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e (fraction routed to e) * (mean prob of e)
+    onehot = (eid[..., None] == jnp.arange(e)).astype(jnp.int32)
+    frac = onehot.any(2).astype(jnp.float32).mean((0, 1))
+    aux = e * jnp.sum(frac * probs.mean((0, 1)))
+
+    # ---- per-sequence positions: cumsum of one-hot along (S*k) -----------
+    oh = onehot.reshape(b, s * k, e)
+    cum = jnp.cumsum(oh, axis=1)                             # (B, S*k, E)
+    flat_eid = eid.reshape(b, s * k)
+    pos = jnp.take_along_axis(cum, flat_eid[..., None], -1)[..., 0] - 1
+    keep = pos < cap
+    dest = jnp.where(keep, flat_eid * cap + pos, e * cap)    # (B, S*k)
+    src = jnp.arange(s * k) // k                             # static!
+
+    # ---- row-local scatter into the expert buffer -------------------------
+    def scat(xr, destr):
+        return jnp.zeros((e * cap + 1, d), x.dtype).at[destr].set(
+            xr[src], mode="drop", unique_indices=True)
+
+    buf = jax.vmap(scat)(x, dest)                            # (B, E*cap+1, D)
+    hidden = buf[:, :-1].reshape(b, e, cap, d)
+    # expert-parallel layout: E over "model" (no-op when E % model != 0,
+    # e.g. mixtral's 8 experts -> per-expert d_ff TP via the weight specs)
+    hidden = constrain(hidden, "batch", "model", None, None)
+
+    # ---- expert compute (grouped einsums, batched over B) ----------------
+    act = jax.nn.silu(jnp.einsum("becd,edf->becf", hidden, p["w_gate"]))
+    up = jnp.einsum("becd,edf->becf", hidden, p["w_up"])
+    out_e = jnp.einsum("becf,efd->becd", act * up, p["w_down"])
+    out_e = constrain(out_e, "batch", "model", None, None)
+    out_rows = out_e.reshape(b, e * cap, d)
+
+    # ---- row-local gather + static-index combine --------------------------
+    def gath(bufr, destr):
+        return bufr[jnp.minimum(destr, e * cap - 1)]
+
+    slot_out = jax.vmap(gath)(out_rows, dest)                # (B, S*k, D)
+    w = (gate.reshape(b, s * k) * keep).astype(x.dtype)
+    weighted = slot_out * w[..., None]
+    combined = weighted.reshape(b, s, k, d).sum(2)           # static combine
+
+    if "shared" in p:
+        sp = p["shared"]
+        shared = (jax.nn.silu(x @ sp["gate"]) * (x @ sp["up"])) @ sp["down"]
+        combined = combined + shared
+    return combined.reshape(b0, s0, d), aux

@@ -1,0 +1,233 @@
+"""ReActNet (Liu et al., ECCV 2020) — the paper's baseline BNN.
+
+MobileNetV1-shaped binary network: an 8-bit full-precision stem conv, 13
+basic blocks (binary 3x3 + binary 1x1, each wrapped with RSign / RPReLU and
+BatchNorm-style normalisation), global pooling and an 8-bit FC head —
+matching the paper's Table I storage/precision breakdown.
+
+Each binary conv runs in one of three selectable modes:
+  * "ste"        — float sign/STE path (training; pure jnp)
+  * "packed"     — xnor/popcount Pallas kernel on packed bits (inference)
+  * "compressed" — Huffman-compressed weights, decode fused into the conv
+                   kernel (the paper's contribution end-to-end)
+
+Weight layout: (Cout, Cin, 3, 3) — the channel dim is the paper's 9-bit
+*bit sequence* axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binarize import ste_sign
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class ReActNetConfig:
+    name: str = "reactnet"
+    num_classes: int = 1000
+    in_channels: int = 3
+    width: int = 32                  # stem width (ReActNet-A: 32)
+    # (out_mult, stride) per basic block; ReActNet-A MobileNet schedule
+    blocks: tuple = ((2, 1), (2, 2), (1, 1), (2, 2), (1, 1), (2, 2),
+                     (1, 1), (1, 1), (1, 1), (1, 1), (1, 1), (2, 2), (1, 1))
+    image_size: int = 224
+    conv_mode: str = "ste"           # ste | packed | compressed
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+CONFIG = ReActNetConfig()
+
+
+# ---------------------------------------------------------------------------
+# layer pieces
+# ---------------------------------------------------------------------------
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def _bn(p, x, train: bool):
+    if train:
+        mean = x.mean(axis=(0, 1, 2))
+        var = x.var(axis=(0, 1, 2))
+    else:
+        mean, var = p["mean"], p["var"]
+    inv = jax.lax.rsqrt(var + 1e-5)
+    return (x - mean) * inv * p["scale"] + p["bias"]
+
+
+def _rsign_init(c):
+    return {"beta": jnp.zeros((c,))}
+
+
+def _rsign(p, x):
+    """ReAct-Sign: learnable per-channel shift before binarisation."""
+    return ste_sign(x - p["beta"])
+
+
+def _rprelu_init(c):
+    return {"gamma": jnp.zeros((c,)), "zeta": jnp.zeros((c,)),
+            "slope": jnp.full((c,), 0.25)}
+
+
+def _rprelu(p, x):
+    """ReAct-PReLU: y = PReLU(x - gamma) + zeta with learnable shifts."""
+    xs = x - p["gamma"]
+    return jnp.where(xs >= 0, xs, xs * p["slope"]) + p["zeta"]
+
+
+def _binary_conv_apply(w, x, stride: int, mode: str, compressed=None):
+    """x is already binarised (+-1).  Returns (N, Ho, Wo, Cout) f32."""
+    alpha = jnp.mean(jnp.abs(jax.lax.stop_gradient(w)), axis=(1, 2, 3))
+    if mode == "ste":
+        wb = ste_sign(w)
+        out = jax.lax.conv_general_dilated(
+            jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)), constant_values=-1.0),
+            jnp.transpose(wb, (2, 3, 1, 0)), (stride, stride), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    elif mode == "packed":
+        out = ops.binary_conv3x3(x, w, stride=stride)
+    elif mode == "compressed":
+        words, tables, meta = compressed
+        out = ops.compressed_binary_conv3x3(
+            x, words, tables, cin=w.shape[1], cout=w.shape[0], stride=stride)
+    else:  # pragma: no cover
+        raise ValueError(mode)
+    return out * alpha
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ReActNetConfig, key) -> dict:
+    keys = iter(jax.random.split(key, 4 + 4 * len(cfg.blocks)))
+    c = cfg.width
+    params: dict = {
+        "stem": {"w": jax.random.normal(next(keys), (c, cfg.in_channels, 3, 3))
+                 * (9 * cfg.in_channels) ** -0.5,
+                 "bn": _bn_init(c)},
+        "blocks": [],
+    }
+    for mult, _stride in cfg.blocks:
+        cout = c * mult
+        blk = {
+            "rsign1": _rsign_init(c),
+            "w3": jax.random.normal(next(keys), (c, c, 3, 3)) * (9 * c) ** -0.5,
+            "bn1": _bn_init(c),
+            "rprelu1": _rprelu_init(c),
+            "rsign2": _rsign_init(c),
+            "w1": jax.random.normal(next(keys), (cout, c, 1, 1)) * c ** -0.5,
+            "bn2": _bn_init(cout),
+            "rprelu2": _rprelu_init(cout),
+        }
+        params["blocks"].append(blk)
+        c = cout
+    params["head"] = {
+        "w": jax.random.normal(next(keys), (c, cfg.num_classes)) * c ** -0.5,
+        "b": jnp.zeros((cfg.num_classes,)),
+    }
+    return params
+
+
+def _block_apply(blk, x, mult: int, stride: int, mode: str, train: bool,
+                 compressed=None):
+    c_in = x.shape[-1]
+    # --- 3x3 binary conv sub-layer (the paper's compression target) -------
+    xb = _rsign(blk["rsign1"], x)
+    y = _binary_conv_apply(blk["w3"], xb, stride, mode, compressed)
+    y = _bn(blk["bn1"], y, train)
+    if stride == 2:
+        short = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    else:
+        short = x
+    y = _rprelu(blk["rprelu1"], y + short)
+
+    # --- 1x1 binary conv sub-layer (as a binary GEMM) ---------------------
+    yb = _rsign(blk["rsign2"], y)
+    w1 = blk["w1"][:, :, 0, 0]                       # (Cout, Cin)
+    alpha = jnp.mean(jnp.abs(jax.lax.stop_gradient(w1)), axis=1)
+    n, h, w_, _ = yb.shape
+    if mode == "ste":
+        z = (yb.reshape(-1, c_in) @ ste_sign(w1).T).reshape(n, h, w_, -1)
+    else:
+        z = ops.binary_matmul(yb.reshape(-1, c_in), w1).reshape(n, h, w_, -1)
+    z = z * alpha
+    z = _bn(blk["bn2"], z, train)
+    if z.shape[-1] == y.shape[-1]:
+        z = z + y
+    else:                                            # channel duplication
+        z = z + jnp.concatenate([y] * mult, axis=-1)
+    return _rprelu(blk["rprelu2"], z)
+
+
+def forward(cfg: ReActNetConfig, params, images, *, train: bool = False,
+            compressed: list | None = None):
+    """images (N, H, W, 3) -> logits (N, num_classes)."""
+    x = jax.lax.conv_general_dilated(
+        images, jnp.transpose(params["stem"]["w"], (2, 3, 1, 0)),
+        (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = _bn(params["stem"]["bn"], x, train)
+    for i, ((mult, stride), blk) in enumerate(zip(cfg.blocks,
+                                                  params["blocks"])):
+        comp = compressed[i] if compressed is not None else None
+        x = _block_apply(blk, x, mult, stride, cfg.conv_mode, train, comp)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(cfg, params, batch, *, train: bool = True):
+    logits = forward(cfg, params, batch["images"], train=train)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], 1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# offline compression of a trained model (paper pipeline)
+# ---------------------------------------------------------------------------
+
+def binary_weight_bits(params) -> dict[str, np.ndarray]:
+    """name -> {0,1} bit tensors of every binary conv (3x3 and 1x1)."""
+    out = {}
+    for i, blk in enumerate(params["blocks"]):
+        out[f"block{i}/w3"] = np.asarray(blk["w3"] >= 0, dtype=np.uint8)
+        out[f"block{i}/w1"] = np.asarray(
+            blk["w1"][:, :, 0, 0] >= 0, dtype=np.uint8)
+    return out
+
+
+def prepare_compressed(params, cluster: bool = True, gather: str = "onehot"):
+    """Per-block fused-kernel operands for conv_mode="compressed"."""
+    comp = []
+    for blk in params["blocks"]:
+        w_bits = np.asarray(blk["w3"] >= 0, dtype=np.uint8)
+        comp.append(ops.prepare_compressed_conv(
+            w_bits, cluster=cluster, gather=gather))
+    return comp
+
+
+def fp_bits(cfg: ReActNetConfig, params) -> int:
+    """Bits of the non-binary remainder (8-bit stem + head, fp32 BN/PReLU),
+    per the paper's Table I quantisation choices."""
+    stem = params["stem"]["w"].size * 8
+    head = (params["head"]["w"].size + params["head"]["b"].size) * 8
+    other = 0
+    for blk in params["blocks"]:
+        for k in ("rsign1", "rsign2", "rprelu1", "rprelu2", "bn1", "bn2"):
+            other += sum(v.size for v in blk[k].values()) * 32
+    other += sum(v.size for v in params["stem"]["bn"].values()) * 32
+    return stem + head + other

@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) is a
+linear first-order recurrence -> evaluated with ``lax.associative_scan``
+(log-depth) for train/prefill and a single fused update for decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import dense_init
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def rglru_init(key, cfg, dtype) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype),
+        "w_gate": dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, w)) * 0.1).astype(dtype),
+        "w_r": dense_init(ks[3], w, w, dtype),
+        "w_i": dense_init(ks[4], w, w, dtype),
+        # Lambda init so that a^c in (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(
+            jnp.linspace(0.9, 0.999, w) ** (-1.0 / _C) - 1.0)
+        ).astype(jnp.float32) * -1.0,
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _conv(x, conv_w, state=None):
+    k = conv_w.shape[0]
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+           if state is None else state)
+    full = jnp.concatenate([pad, x], axis=1)
+    out = sum(full[:, i:i + x.shape[1]] * conv_w[i] for i in range(k))
+    return out, full[:, -(k - 1):]
+
+
+def _gates(p, xw):
+    r = jax.nn.sigmoid(xw.astype(jnp.float32) @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xw.astype(jnp.float32) @ p["w_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r        # (B, S, W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * xw.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None):
+    """cache = {"conv": (B, 3, W), "h": (B, W)}."""
+    b, s, _ = x.shape
+    decode = cache is not None and s == 1
+
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    xw = x @ p["w_x"]
+    xw = constrain(xw, "batch", None, "model")   # recurrence shards on width
+    xw, new_conv = _conv(xw, p["conv_w"], cache["conv"] if decode else None)
+    a, gated = _gates(p, xw)
+
+    if decode:
+        h = cache["h"] * a[:, 0] + gated[:, 0]
+        y = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, b1 * a2 + b2
+
+        a_sc, h_sc = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        y = h_sc
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                         "h": h_sc[:, -1]}
+    y = (y.astype(x.dtype) * gate) @ p["w_out"]
+    return y, new_cache
+
+
+def rglru_cache_spec(cfg, batch: int):
+    w = cfg.lru_width
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, 3, w), cfg.jnp_dtype),
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+    }

@@ -1,0 +1,188 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear state passing between chunks); decode is the O(1) recurrent update on
+a (B, H, P, N) state.  Group count G divides heads (mamba2-780m: G=1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import dense_init, rms_norm
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., Q) -> (..., Q, Q) lower-triangular segment sums:
+    out[..., i, j] = sum_{j < l <= i} a[..., l] (=-inf above diagonal)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in = cfg.expand * d
+    h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * g * n + h
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel,
+                                             d_in + 2 * g * n)) * 0.1
+                   ).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _split_proj(cfg, z_all):
+    d_in = cfg.expand * cfg.d_model
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(z_all, [d_in, 2 * d_in + 2 * g * n], axis=-1)
+    return z, xbc, dt  # gate, conv-input, dt (.., h)
+
+
+def _causal_conv(xbc, conv_w, state=None):
+    """Depthwise causal conv over time. xbc (B, S, C); conv_w (K, C).
+    state (B, K-1, C) carries context across decode steps."""
+    k = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    new_state = full[:, -(k - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x (B, S, H, P); dt (B, S, H) post-softplus; b, c (B, S, G, N).
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    bsz, s, h, p_dim = x.shape
+    g = b.shape[2]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+    a = -jnp.exp(a_log)                                       # (H,)
+
+    xc = x.reshape(bsz, nc, chunk, h, p_dim)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    n_state = b.shape[-1]
+    bc = b.reshape(bsz, nc, chunk, g, n_state)
+    cc = c.reshape(bsz, nc, chunk, g, n_state)
+    if g != h:
+        bc = jnp.repeat(bc, rep, axis=3)
+        cc = jnp.repeat(cc, rep, axis=3)
+
+    da = dtc * a                                              # (B,nc,Q,H)
+    da_cs = jnp.cumsum(da, axis=2)                            # (B,nc,Q,H)
+    xdt = xc * dtc[..., None]
+
+    # intra-chunk (diagonal) term
+    l_mat = jnp.exp(_segsum(jnp.moveaxis(da, 2, 3)))          # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bc)
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp",
+                        scores, l_mat, xdt)
+
+    # chunk-final states
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)       # (B,nc,Q,H)
+    states = jnp.einsum("bckhn,bckh,bckhp->bchpn", bc, decay_states, xdt)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                 # (B,nc,H)
+
+    def step(h_prev, inp):
+        st, dec = inp
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((bsz, h, p_dim, bc.shape[-1]), jnp.float32)
+    final, h_init = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    h_init = jnp.moveaxis(h_init, 0, 1)                       # (B,nc,H,P,N)
+
+    # contribution of incoming state to each position
+    decay_out = jnp.exp(da_cs)                                # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       cc, h_init.astype(cc.dtype), decay_out.astype(cc.dtype))
+    y = (y_diag + y_off).reshape(bsz, s, h, p_dim)
+    return y, final
+
+
+def ssm_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None):
+    """Mamba2 mixer. cache = {"conv": (B,K-1,C), "state": (B,H,P,N)}."""
+    bsz, s, _ = x.shape
+    d_in = cfg.expand * cfg.d_model
+    h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    p_dim = d_in // h
+    decode = cache is not None and s == 1
+
+    z_all = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, z_all)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    conv_state = cache["conv"] if decode else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = xs.reshape(bsz, s, h, p_dim)
+    b = b.reshape(bsz, s, g, n)
+    c = c.reshape(bsz, s, g, n)
+
+    if decode:
+        a = -jnp.exp(p["A_log"])                              # (H,)
+        da = jnp.exp(dt[:, 0] * a)                            # (B,H)
+        rep = h // g
+        bfull = jnp.repeat(b[:, 0], rep, axis=1)              # (B,H,N)
+        cfull = jnp.repeat(c[:, 0], rep, axis=1)
+        xdt = xs[:, 0] * dt[:, 0][..., None]                  # (B,H,P)
+        state = (cache["state"] * da[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", xdt.astype(jnp.float32),
+                              bfull.astype(jnp.float32)))
+        y = jnp.einsum("bhpn,bhn->bhp", state, cfull.astype(jnp.float32))
+        y = y[:, None] + xs * p["D"][None, None, :, None]
+        new_cache = {"conv": new_conv, "state": state}
+    else:
+        sp = s
+        pad = (-sp) % cfg.ssm_chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # SSD compute shards over heads (48 % 16 == 0 on production meshes)
+        xs = constrain(xs, "batch", None, "model", None)
+        dt = constrain(dt, "batch", None, "model")
+        y, final = ssd_chunked(xs, dt, p["A_log"], b, c, cfg.ssm_chunk)
+        y = y[:, :s] + xs[:, :s] * p["D"][None, None, :, None]
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                         "state": final}
+
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"], new_cache
+
+
+def ssm_cache_spec(cfg, batch: int):
+    d_in = cfg.expand * cfg.d_model
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.conv_kernel - 1, d_in + 2 * g * n), cfg.jnp_dtype),
+        "state": jax.ShapeDtypeStruct((batch, h, d_in // h, n), jnp.float32),
+    }

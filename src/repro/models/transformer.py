@@ -1,0 +1,357 @@
+"""Decoder-only LM composition: block dispatch + scan-over-layers stacking.
+
+A config's layer stack is ``prefix_kinds + scan_pattern * scan_repeats +
+suffix_kinds``.  The repeated pattern is stacked parameter-wise and executed
+with ``lax.scan`` over super-blocks (one super-block = one pass through the
+pattern) so HLO size and compile time are independent of depth; prefix and
+suffix layers are unrolled.  Heterogeneous patterns (gemma2's local/global
+alternation, recurrentgemma's rec/rec/attn triple) are naturally supported
+because the super-block pytree is uniform across repeats.
+
+Block kinds: attn | swa | local | global | attn_local | mla_dense | mla_moe |
+swa_moe | moe | ssm | rglru | bidir (encoder) | dec (decoder w/ cross-attn).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (chunked_cross_entropy, cross_entropy,
+                                 embed_init, mlp_apply, mlp_init, rms_norm,
+                                 rms_norm_init, softcap)
+
+ATTN_KINDS = ("attn", "swa", "local", "global", "attn_local", "bidir")
+MOE_KINDS = ("swa_moe", "mla_moe", "moe")
+MLA_KINDS = ("mla_dense", "mla_moe")
+
+
+def remat_wrap(cfg, fn):
+    """Wrap a scan body in jax.checkpoint per the config's remat policy."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _attn_kind(kind: str) -> str:
+    """Map block kind -> attention variant."""
+    return {"swa": "swa", "swa_moe": "swa", "local": "local",
+            "attn_local": "local", "bidir": "bidir"}.get(kind, "attn")
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+def block_init(kind: str, cfg, key, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {"ln1": rms_norm_init(d, dtype)}
+    if kind == "ssm":
+        p["mixer"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+        return p
+    if kind == "rglru":
+        p["mixer"] = rglru_mod.rglru_init(ks[0], cfg, dtype)
+    elif kind in MLA_KINDS:
+        p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    if kind == "dec":
+        p["ln_cross"] = rms_norm_init(d, dtype)
+        p["cross"] = attn.cross_attn_init(ks[2], cfg, dtype)
+    p["ln2"] = rms_norm_init(d, dtype)
+    if kind in MOE_KINDS:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    elif cfg.d_ff:
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dtype)
+    if cfg.post_norms:
+        p["post_ln1"] = rms_norm_init(d, dtype)
+        p["post_ln2"] = rms_norm_init(d, dtype)
+    return p
+
+
+def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
+                cache=None, pos=None, prefix_len: int = 0, enc_out=None):
+    """-> (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+
+    if kind == "ssm":
+        y, new_cache = ssm_mod.ssm_apply(p["mixer"], h, cfg,
+                                         cache=cache, pos=pos)
+        return x + y, new_cache, aux
+
+    if kind == "rglru":
+        y, new_cache = rglru_mod.rglru_apply(p["mixer"], h, cfg,
+                                             cache=cache, pos=pos)
+    elif kind in MLA_KINDS:
+        y, new_cache = attn.mla_apply(p["attn"], h, cfg, cache=cache, pos=pos)
+    else:
+        self_cache = cache.get("self") if isinstance(cache, dict) and \
+            "self" in (cache or {}) else cache
+        y, new_self = attn.attn_apply(
+            p["attn"], h, cfg, kind=_attn_kind(kind), cache=self_cache,
+            pos=pos, prefix_len=prefix_len)
+        new_cache = new_self
+    if cfg.post_norms:
+        y = rms_norm(p["post_ln1"], y, cfg.norm_eps)
+    x = x + y
+
+    if kind == "dec":                     # cross-attention sub-layer
+        hc = rms_norm(p["ln_cross"], x, cfg.norm_eps)
+        # cached cross-K/V is only valid for decode; prefill recomputes it
+        # from enc_out (the initial cache is zeros)
+        decode_mode = x.shape[1] == 1 and enc_out is None
+        enc_kv = cache.get("cross") if (decode_mode and
+                                        isinstance(cache, dict)) else None
+        yc, cross_kv = attn.cross_attn_apply(p["cross"], hc, cfg,
+                                             enc_kv=enc_kv, enc_out=enc_out)
+        x = x + yc
+        if cache is not None:
+            new_cache = {"self": new_cache, "cross": cross_kv}
+
+    if "moe" in p or "mlp" in p:
+        h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+        if kind in MOE_KINDS:
+            y2, aux = moe_mod.moe_apply(p["moe"], h2, cfg)
+        else:
+            y2 = mlp_apply(p["mlp"], h2, cfg.mlp_act,
+                           binarized=cfg.binarize_mlp)
+        if cfg.post_norms:
+            y2 = rms_norm(p["post_ln2"], y2, cfg.norm_eps)
+        x = x + y2
+    return x, new_cache, aux
+
+
+def block_cache_spec(kind: str, cfg, batch: int, max_len: int):
+    if kind == "ssm":
+        return ssm_mod.ssm_cache_spec(cfg, batch)
+    if kind == "rglru":
+        return rglru_mod.rglru_cache_spec(cfg, batch)
+    if kind in MLA_KINDS:
+        return attn.mla_cache_spec(cfg, batch, max_len)
+    if kind == "dec":
+        return {"self": attn.attn_cache_spec(cfg, "attn", batch, max_len),
+                "cross": {"k": jax.ShapeDtypeStruct(
+                              (batch, cfg.encoder_seq, cfg.num_kv_heads,
+                               cfg.head_dim), cfg.jnp_dtype),
+                          "v": jax.ShapeDtypeStruct(
+                              (batch, cfg.encoder_seq, cfg.num_kv_heads,
+                               cfg.head_dim), cfg.jnp_dtype)}}
+    return attn.attn_cache_spec(cfg, _attn_kind(kind), batch, max_len)
+
+
+# ---------------------------------------------------------------------------
+# parameter / cache trees
+# ---------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg, key) -> dict:
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, 4 + len(cfg.prefix_kinds)
+                            + cfg.scan_repeats + len(cfg.suffix_kinds))
+    ki = iter(range(len(keys)))
+    params: dict = {
+        "embed": embed_init(keys[next(ki)], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(
+            keys[next(ki)], cfg.vocab_size, cfg.d_model, dtype).T
+    params["prefix"] = [
+        block_init(k, cfg, keys[next(ki)], dtype) for k in cfg.prefix_kinds]
+    reps = []
+    for _ in range(cfg.scan_repeats):
+        kk = jax.random.split(keys[next(ki)], len(cfg.scan_pattern))
+        reps.append({f"b{i}": block_init(k, cfg, kk[i], dtype)
+                     for i, k in enumerate(cfg.scan_pattern)})
+    params["scan"] = _stack(reps) if reps else {}
+    params["suffix"] = [
+        block_init(k, cfg, keys[next(ki)], dtype) for k in cfg.suffix_kinds]
+    return params
+
+
+def init_cache_specs(cfg, batch: int, max_len: int):
+    cache: dict = {
+        "prefix": [block_cache_spec(k, cfg, batch, max_len)
+                   for k in cfg.prefix_kinds],
+        "suffix": [block_cache_spec(k, cfg, batch, max_len)
+                   for k in cfg.suffix_kinds],
+    }
+    one = {f"b{i}": block_cache_spec(k, cfg, batch, max_len)
+           for i, k in enumerate(cfg.scan_pattern)}
+    cache["scan"] = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.scan_repeats, *s.shape), s.dtype),
+        one) if cfg.scan_repeats else {}
+    return cache
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        init_cache_specs(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens, vision_embeds=None):
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    # sequence-parallel residual stream: tokens sharded over "model"
+    return constrain(x, "batch", "model", None)
+
+
+def _unembed(cfg, params, x):
+    """x: final-norm'd hidden -> softcapped f32 logits."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = softcap(logits, cfg.final_logit_softcap)
+    # logits stay sequence-sharded: (B, S/model, V) — 16x less live memory
+    # than vocab-full-per-device, and CE is fully local in S
+    return constrain(logits.astype(jnp.float32), "batch", "model", None)
+
+
+def backbone(cfg, params, tokens, *, vision_embeds=None):
+    """Embed + layer stack + final norm -> (hidden (B, S*, D), aux loss)."""
+    prefix_len = vision_embeds.shape[1] if vision_embeds is not None else 0
+    x = _embed(cfg, params, tokens, vision_embeds)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for kind, p in zip(cfg.prefix_kinds, params["prefix"]):
+        x, _, aux = block_apply(kind, cfg, p, x, prefix_len=prefix_len)
+        aux_total += aux
+
+    if cfg.scan_repeats:
+        def body(carry, layer_params):
+            x, aux_sum = carry
+            for i, kind in enumerate(cfg.scan_pattern):
+                x, _, aux = block_apply(kind, cfg, layer_params[f"b{i}"], x,
+                                        prefix_len=prefix_len)
+                aux_sum += aux
+            x = constrain(x, "batch", "model", None)
+            return (x, aux_sum), None
+
+        (x, aux_total), _ = jax.lax.scan(remat_wrap(cfg, body),
+                                         (x, aux_total), params["scan"])
+
+    for kind, p in zip(cfg.suffix_kinds, params["suffix"]):
+        x, _, aux = block_apply(kind, cfg, p, x, prefix_len=prefix_len)
+        aux_total += aux
+    return rms_norm(params["final_norm"], x, cfg.norm_eps), aux_total
+
+
+def forward(cfg, params, tokens, *, vision_embeds=None):
+    """Training/scoring forward -> (logits (B, S*, V) f32, aux loss)."""
+    x, aux_total = backbone(cfg, params, tokens,
+                            vision_embeds=vision_embeds)
+    return _unembed(cfg, params, x), aux_total
+
+
+def loss_fn(cfg, params, batch) -> jax.Array:
+    hidden, aux = backbone(cfg, params, batch["tokens"],
+                           vision_embeds=batch.get("vision_embeds"))
+    if batch.get("vision_embeds") is not None:
+        hidden = hidden[:, batch["vision_embeds"].shape[1]:]
+    hidden = constrain(hidden, "batch", "model", None)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ce = chunked_cross_entropy(hidden, head, batch["labels"],
+                               softcap_val=cfg.final_logit_softcap)
+    return ce + 0.01 * aux
+
+
+def prefill(cfg, params, tokens, cache, *, vision_embeds=None):
+    """Run the full prompt, returning (last-token logits, filled cache)."""
+    prefix_len = vision_embeds.shape[1] if vision_embeds is not None else 0
+    x = _embed(cfg, params, tokens, vision_embeds)
+    new_cache = {"prefix": [], "suffix": []}
+
+    for kind, p, c in zip(cfg.prefix_kinds, params["prefix"],
+                          cache["prefix"]):
+        x, nc, _ = block_apply(kind, cfg, p, x, cache=c,
+                               prefix_len=prefix_len)
+        new_cache["prefix"].append(nc)
+
+    if cfg.scan_repeats:
+        def body(x, xs):
+            layer_params, layer_cache = xs
+            ncs = {}
+            for i, kind in enumerate(cfg.scan_pattern):
+                x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
+                                       cache=layer_cache[f"b{i}"],
+                                       prefix_len=prefix_len)
+                ncs[f"b{i}"] = nc
+            return x, ncs
+
+        x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+        new_cache["scan"] = scan_cache
+    else:
+        new_cache["scan"] = {}
+
+    for kind, p, c in zip(cfg.suffix_kinds, params["suffix"],
+                          cache["suffix"]):
+        x, nc, _ = block_apply(kind, cfg, p, x, cache=c,
+                               prefix_len=prefix_len)
+        new_cache["suffix"].append(nc)
+
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = _unembed(cfg, params, x)
+    return logits, new_cache
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """One token with a filled cache -> (logits (B,1,V), new cache).
+
+    ``pos`` is the absolute position of ``tokens`` (vision prefix included
+    for VLM archs).
+    """
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = constrain(x, "batch", None, None)
+    new_cache = {"prefix": [], "suffix": []}
+
+    for kind, p, c in zip(cfg.prefix_kinds, params["prefix"],
+                          cache["prefix"]):
+        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
+        new_cache["prefix"].append(nc)
+
+    if cfg.scan_repeats:
+        def body(x, xs):
+            layer_params, layer_cache = xs
+            ncs = {}
+            for i, kind in enumerate(cfg.scan_pattern):
+                x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
+                                       cache=layer_cache[f"b{i}"], pos=pos)
+                ncs[f"b{i}"] = nc
+            return x, ncs
+
+        x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+        new_cache["scan"] = scan_cache
+    else:
+        new_cache["scan"] = {}
+
+    for kind, p, c in zip(cfg.suffix_kinds, params["suffix"],
+                          cache["suffix"]):
+        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
+        new_cache["suffix"].append(nc)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _unembed(cfg, params, x), new_cache

@@ -1,0 +1,89 @@
+"""AdamW + LR schedules, BNN-aware (no framework dependency).
+
+BNN latent weights (paper §II-A): binarised layers train on full-precision
+latent weights via STE — the optimizer is oblivious, but ``clip_latent``
+keeps latents in [-1.5, 1.5] so signs keep flipping (standard BNN practice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    clip_latent: float = 0.0          # >0 for BNN latent weights
+
+
+def lr_schedule(oc: OptConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(oc.warmup_steps, 1)
+        t = (step - oc.warmup_steps) / jnp.maximum(
+            oc.total_steps - oc.warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return oc.lr * jnp.where(step < oc.warmup_steps, warm, cos)
+    return fn
+
+
+def init_state(params: Any) -> dict:
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"step": jnp.zeros((), jnp.int32),
+            "mu": zeros(params), "nu": zeros(params)}
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(params, grads, state, oc: OptConfig):
+    """One AdamW step -> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(oc)(step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if oc.grad_clip else 1.0
+    b1, b2 = oc.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + oc.eps) + \
+            oc.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        if oc.clip_latent:
+            new_p = jnp.clip(new_p, -oc.clip_latent, oc.clip_latent)
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {"step": step,
+                 "mu": treedef.unflatten([o[1] for o in out]),
+                 "nu": treedef.unflatten([o[2] for o in out])}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

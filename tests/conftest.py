@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def skewed_sequences(rng, n: int, peak: float = 300.0) -> np.ndarray:
+    """Sequence sample with a ReActNet-like skewed histogram."""
+    probs = np.ones(512)
+    probs[0] = peak
+    probs[511] = peak * 0.7
+    for v in (1, 7, 73, 255, 448):
+        probs[v] = peak * 0.3
+    probs /= probs.sum()
+    return rng.choice(512, size=n, p=probs).astype(np.uint16)

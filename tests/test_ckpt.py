@@ -1,0 +1,107 @@
+"""Checkpoint tests: roundtrip, atomicity, resume, compressed snapshots,
+elastic re-mesh restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_host_mesh
+
+
+def tree(rng):
+    return {
+        "params": {"scan": {"w": jnp.asarray(
+            rng.standard_normal((4, 8, 16)).astype(np.float32))},
+            "embed": jnp.asarray(rng.standard_normal((32, 16))
+                                 .astype(np.float32))},
+        "opt": {"step": jnp.asarray(7, jnp.int32),
+                "mu": {"x": jnp.zeros((3,), jnp.float32)}},
+    }
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, rng):
+        t = tree(rng)
+        ckpt.save(t, str(tmp_path), step=10)
+        restored, step = ckpt.restore(str(tmp_path), t)
+        assert step == 10
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_marker_and_multiple_steps(self, tmp_path, rng):
+        t = tree(rng)
+        ckpt.save(t, str(tmp_path), step=10)
+        ckpt.save(t, str(tmp_path), step=20)
+        assert ckpt.latest_step(str(tmp_path)) == 20
+        _, step = ckpt.restore(str(tmp_path), t)
+        assert step == 20
+        _, step = ckpt.restore(str(tmp_path), t, step=10)
+        assert step == 10
+
+    def test_async_save(self, tmp_path, rng):
+        t = tree(rng)
+        th = ckpt.save(t, str(tmp_path), step=5, async_=True)
+        th.join()
+        assert ckpt.latest_step(str(tmp_path)) == 5
+
+    def test_torn_write_invisible(self, tmp_path, rng):
+        """A .tmp dir (simulated crash mid-write) is never picked up."""
+        t = tree(rng)
+        ckpt.save(t, str(tmp_path), step=1)
+        os.makedirs(str(tmp_path / "step_2.tmp"))
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+    def test_restore_with_shardings(self, tmp_path, rng):
+        t = tree(rng)
+        ckpt.save(t, str(tmp_path), step=3)
+        mesh = make_host_mesh()
+        sds = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        shardings = jax.tree_util.tree_map(
+            lambda x: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()), t)
+        restored, _ = ckpt.restore(str(tmp_path), sds, shardings=shardings)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["embed"]),
+            np.asarray(t["params"]["embed"]))
+
+    def test_compressed_binary_checkpoint(self, tmp_path, rng):
+        """conv w3 leaves stored Huffman-compressed; restore reproduces
+        sign * per-channel scale exactly (inference snapshot semantics)."""
+        w3 = rng.standard_normal((8, 32, 3, 3)).astype(np.float32)
+        t = {"blocks": [{"w3": jnp.asarray(w3)}]}
+        ckpt.save(t, str(tmp_path), step=1, compress_binary=True)
+        restored, _ = ckpt.restore(str(tmp_path), t)
+        rec = np.asarray(restored["blocks"][0]["w3"])
+        scale = np.abs(w3).mean(axis=(1, 2, 3), keepdims=True)
+        expect = np.where(w3 >= 0, 1.0, -1.0) * scale
+        np.testing.assert_allclose(rec, expect, rtol=1e-6)
+        # and it actually saved fewer bytes than raw f32
+        blob = os.path.getsize(
+            os.path.join(str(tmp_path), "step_1", "host0.npz"))
+        assert blob < w3.nbytes
+
+
+class TestElasticRemesh:
+    def test_restore_onto_new_mesh(self, tmp_path, rng):
+        from repro.dist.fault import remesh
+        t = {"w": jnp.asarray(rng.standard_normal((8, 16))
+                              .astype(np.float32))}
+        ckpt.save(t, str(tmp_path), step=2)
+        new_mesh = make_host_mesh()      # "surviving" single-host mesh
+
+        def shardings_fn(like, mesh):
+            return jax.tree_util.tree_map(
+                lambda x: jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()), like)
+
+        restored, step = remesh(str(tmp_path), t, new_mesh, shardings_fn)
+        assert step == 2
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(t["w"]))

@@ -1,0 +1,164 @@
+"""Unit + property tests for the compression core (paper §III)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack, clustering, compression, frequency, huffman
+from tests.conftest import skewed_sequences
+
+
+# ---------------------------------------------------------------------------
+# bitpack
+# ---------------------------------------------------------------------------
+
+class TestBitpack:
+    def test_kernel_sequence_roundtrip(self, rng):
+        w = rng.integers(0, 2, size=(8, 32, 3, 3), dtype=np.uint8)
+        seqs = bitpack.kernel_to_sequences(w)
+        assert seqs.shape == (8, 32) and seqs.max() < 512
+        assert np.array_equal(bitpack.sequences_to_kernel(seqs), w)
+
+    def test_natural_mapping(self):
+        w = np.zeros((1, 1, 3, 3), dtype=np.uint8)
+        assert bitpack.kernel_to_sequences(w)[0, 0] == 0
+        w[:] = 1
+        assert bitpack.kernel_to_sequences(w)[0, 0] == 511
+        w = np.zeros((1, 1, 3, 3), dtype=np.uint8)
+        w[0, 0, 0, 0] = 1            # position (0,0) -> MSB (paper Fig. 2)
+        assert bitpack.kernel_to_sequences(w)[0, 0] == 256
+
+    def test_channel_pack_conv_roundtrip(self, rng):
+        w = rng.integers(0, 2, size=(4, 64, 3, 3), dtype=np.uint8)
+        packed = bitpack.channel_pack_conv(w)
+        assert packed.shape == (4, 2, 9)
+        assert np.array_equal(bitpack.channel_unpack_conv(packed), w)
+
+    @given(st.integers(1, 5), st.integers(1, 700))
+    @settings(max_examples=25, deadline=None)
+    def test_gemm_roundtrip(self, n, k):
+        rng = np.random.default_rng(n * 1000 + k)
+        bits = rng.integers(0, 2, size=(n, k), dtype=np.uint8)
+        seqs = bitpack.gemm_to_sequences(bits)
+        assert np.array_equal(bitpack.sequences_to_gemm(seqs, k), bits)
+        packed = bitpack.pack_gemm_operand(bits)
+        assert np.array_equal(bitpack.unpack_gemm_operand(packed, k), bits)
+
+
+# ---------------------------------------------------------------------------
+# huffman (simplified 4-node coder)
+# ---------------------------------------------------------------------------
+
+class TestHuffman:
+    def test_code_lengths_match_paper(self, rng):
+        hist = frequency.sequence_histogram(skewed_sequences(rng, 20000))
+        assign = huffman.assign_nodes(hist)
+        _, lens = assign.code_of(np.arange(512))
+        assert set(np.unique(lens)) <= {6, 8, 9, 12}   # paper §VI
+        # top-32 sequences must receive 6-bit codes
+        top32 = frequency.ranked_sequences(hist)[:32]
+        assert (lens[top32] == 6).all()
+
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4000))
+    @settings(max_examples=20, deadline=None)
+    def test_stream_roundtrip(self, seed, n):
+        rng = np.random.default_rng(seed)
+        vals = skewed_sequences(rng, n)
+        assign = huffman.assign_nodes(frequency.sequence_histogram(vals))
+        words, nbits = huffman.encode_stream(vals, assign)
+        dec = huffman.decode_stream(words, nbits, assign, count=n)
+        assert np.array_equal(dec, vals)
+
+    def test_simplified_never_beats_full_huffman(self, rng):
+        hist = frequency.sequence_histogram(skewed_sequences(rng, 30000))
+        assign = huffman.assign_nodes(hist)
+        assert assign.avg_bits(hist) >= huffman.full_huffman_avg_bits(hist)
+
+    def test_paper_ratio_arithmetic(self, rng):
+        """Feeding the paper's measured node frequencies reproduces the
+        published compression ratios (claims C2/C3)."""
+        h_enc = frequency.synthetic_histogram(
+            (0.46, 0.24, 0.23, 0.05), 300_000, rng)
+        r_enc = huffman.assign_nodes(h_enc).compression_ratio(h_enc)
+        assert 1.18 <= r_enc <= 1.27, r_enc              # paper: 1.18-1.25
+        h_cl = frequency.synthetic_histogram(
+            (0.65, 0.25, 0.08, 0.006), 300_000, rng)
+        r_cl = huffman.assign_nodes(h_cl).compression_ratio(h_cl)
+        assert 1.29 <= r_cl <= 1.37, r_cl                # paper: 1.30-1.36
+
+
+# ---------------------------------------------------------------------------
+# clustering (paper §III-C)
+# ---------------------------------------------------------------------------
+
+class TestClustering:
+    def test_hamming_invariant(self, rng):
+        vals = skewed_sequences(rng, 20000)
+        _, repl = clustering.apply_clustering(vals)
+        assert clustering.max_weight_flips(repl) <= 1
+
+    def test_replacements_target_top_m(self, rng):
+        vals = skewed_sequences(rng, 20000)
+        hist = frequency.sequence_histogram(vals)
+        repl = clustering.build_replacement_map(hist, m=64, n=256)
+        changed = np.nonzero(repl != np.arange(512))[0]
+        top = set(frequency.ranked_sequences(hist)[:64].tolist())
+        assert all(int(repl[c]) in top for c in changed)
+
+    def test_clustering_improves_ratio(self, rng):
+        vals = skewed_sequences(rng, 40000)
+        before = compression.compress_sequences(vals, vals.shape, "gemm",
+                                                cluster=False)
+        after = compression.compress_sequences(vals, vals.shape, "gemm",
+                                               cluster=True)
+        assert after.ratio_stream() >= before.ratio_stream()
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_replacement_map_is_projection(self, seed):
+        rng = np.random.default_rng(seed)
+        hist = frequency.sequence_histogram(skewed_sequences(rng, 3000))
+        repl = clustering.build_replacement_map(hist)
+        # applying twice == applying once (targets are never remapped)
+        assert np.array_equal(repl[repl], repl)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end compression artifacts
+# ---------------------------------------------------------------------------
+
+class TestCompression:
+    def test_conv_lossless_without_clustering(self, rng):
+        w = rng.integers(0, 2, size=(16, 64, 3, 3), dtype=np.uint8)
+        ct = compression.compress_conv3x3(w, cluster=False)
+        assert np.array_equal(compression.decompress(ct), w)
+
+    def test_tiled_matches_stream(self, rng):
+        vals = skewed_sequences(rng, 5000)
+        ct = compression.compress_sequences(vals, vals.shape, "gemm",
+                                            cluster=False)
+        ts = ct.tiled
+        for ti in range(ts.n_tiles):
+            for si in range(0, ts.s, 31):
+                dec = huffman.decode_stream(
+                    np.ascontiguousarray(ts.words[ti, :, si]),
+                    ts.w * 32, ct.assign, count=ts.c)
+                idx = ti * ts.s * ts.c + np.arange(ts.c) * ts.s + si
+                exp = np.where(idx < len(vals),
+                               vals[np.minimum(idx, len(vals) - 1)], 0)
+                assert np.array_equal(dec, exp)
+
+    def test_fused_layout_roundtrip(self, rng):
+        bits = rng.integers(0, 2, size=(40, 700), dtype=np.uint8)
+        fc = compression.compress_gemm_fused(bits, cluster=False)
+        assert np.array_equal(compression.decompress_fused(fc), bits)
+
+    def test_model_report(self, rng):
+        # skewed kernels -> binary ratio > 1; model ratio between 1 and
+        # binary ratio (paper: 1.32x kernels, 1.2x model)
+        seqs = skewed_sequences(rng, 16 * 64).reshape(16, 64)
+        w = bitpack.sequences_to_kernel(seqs)
+        tensors = {"block0/w3": w}
+        _, rep = compression.compress_model(tensors, fp_bits=w.size // 4)
+        assert rep.binary_ratio > 1.1
+        assert 1.0 < rep.model_ratio < rep.binary_ratio

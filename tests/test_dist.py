@@ -1,0 +1,128 @@
+"""Distribution-layer tests: sharding rules, HLO census, safe specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.launch.hlo_census import HloCensus
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    """Just enough mesh for param_spec unit tests (16x16 production shape)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+@pytest.fixture
+def mesh16():
+    return FakeMesh({"data": 16, "model": 16})
+
+
+class TestParamSpecs:
+    def test_embed_vocab_sharded(self, mesh16):
+        assert shd.param_spec("embed", (256000, 2304), mesh16) == \
+            P("model", None)
+
+    def test_embed_odd_vocab_replicated(self, mesh16):
+        assert shd.param_spec("embed", (50280, 1536), mesh16) == \
+            P(None, None)
+
+    def test_projections(self, mesh16):
+        assert shd.param_spec("scan/b0/attn/wq", (2304, 2048), mesh16) == \
+            P(None, "model")
+        assert shd.param_spec("scan/b0/attn/wo", (2048, 2304), mesh16) == \
+            P("model", None)
+        assert shd.param_spec("scan/b0/mlp/up", (2304, 9216), mesh16) == \
+            P(None, "model")
+        assert shd.param_spec("scan/b0/mlp/down", (9216, 2304), mesh16) == \
+            P("model", None)
+
+    def test_moe_expert_parallel(self, mesh16):
+        # 160 experts divide 16 -> EP on the expert axis
+        assert shd.param_spec("moe/w_gate", (160, 5120, 1536), mesh16) == \
+            P("model", None, None)
+        # 8 experts don't -> per-expert TP on d_ff
+        assert shd.param_spec("moe/w_gate", (8, 6144, 16384), mesh16) == \
+            P(None, None, "model")
+        assert shd.param_spec("moe/w_down", (8, 16384, 6144), mesh16) == \
+            P(None, "model", None)
+
+    def test_fsdp_adds_dp_axis(self, mesh16):
+        spec = shd.param_spec("scan/b0/attn/wq", (2304, 2048), mesh16,
+                              fsdp=True)
+        assert spec == P(("data",), "model")
+
+    def test_norms_replicated(self, mesh16):
+        assert shd.param_spec("scan/b0/ln1", (2304,), mesh16) == P(None)
+
+
+class TestSafeSpec:
+    def test_drops_nondivisible(self):
+        mesh = make_host_mesh()
+        spec = shd.safe_spec(mesh, (1, 1, 51866), "batch", None, "model")
+        # single CPU device: batch axis size 1 divides everything; model=1
+        assert isinstance(spec, P)
+
+    def test_constrain_noop_off_mesh(self):
+        x = jnp.ones((4, 4))
+        assert shd.constrain(x, "batch", None) is x
+
+
+class TestHloCensus:
+    def test_scan_trip_weighting(self):
+        a = jnp.zeros((128, 128), jnp.float32)
+
+        def scanned(a):
+            def body(x, _):
+                return x @ a, None
+            return jax.lax.scan(body, a, None, length=5)[0]
+
+        hlo = jax.jit(scanned).lower(a).compile().as_text()
+        c = HloCensus(hlo)
+        np.testing.assert_allclose(c.flops(), 5 * 2 * 128 ** 3, rtol=0.01)
+
+    def test_nested_scan(self):
+        a = jnp.zeros((64, 64), jnp.float32)
+
+        def nested(a):
+            def inner(x, _):
+                return x @ a, None
+
+            def outer(x, _):
+                return jax.lax.scan(inner, x, None, length=3)[0], None
+
+            return jax.lax.scan(outer, a, None, length=4)[0]
+
+        hlo = jax.jit(nested).lower(a).compile().as_text()
+        c = HloCensus(hlo)
+        np.testing.assert_allclose(c.flops(), 12 * 2 * 64 ** 3, rtol=0.01)
+
+    def test_collectives_counted(self):
+        mesh = make_host_mesh()
+        if mesh.devices.size < 2:
+            pytest.skip("single device: no collectives emitted")
+
+    def test_hbm_modes_ordered(self):
+        a = jnp.zeros((256, 256), jnp.float32)
+        hlo = jax.jit(lambda x: jnp.tanh(x @ x) + 1.0).lower(a) \
+            .compile().as_text()
+        c = HloCensus(hlo)
+        assert c.hbm_bytes("tpu") <= c.hbm_bytes("cpu")
+
+
+class TestBatchShardings:
+    def test_batch_of_one_replicates(self):
+        mesh = make_host_mesh()
+        sds = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32),
+               "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        out = shd.batch_shardings(sds, mesh)
+        assert out["pos"].spec == P()

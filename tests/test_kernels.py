@@ -1,0 +1,162 @@
+"""Per-kernel allclose tests vs the ref.py oracles (interpret mode on CPU),
+with shape/dtype sweeps + hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack, compression
+from repro.kernels import ops, ref
+from repro.kernels.huffman_decode import pack_bitplane_tables
+from tests.conftest import skewed_sequences
+
+
+class TestBinaryContraction:
+    @pytest.mark.parametrize("m,n,k", [
+        (1, 1, 9), (7, 5, 100), (64, 32, 288), (130, 70, 600),
+        (33, 129, 1024),
+    ])
+    def test_shapes_vs_oracle(self, rng, m, n, k):
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((n, k)).astype(np.float32)
+        out = ops.binary_matmul(jnp.asarray(x), jnp.asarray(w))
+        exp = ref.binary_matmul(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float16])
+    def test_dtypes(self, rng, dtype):
+        x = rng.standard_normal((16, 100)).astype(dtype)
+        w = rng.standard_normal((8, 100)).astype(dtype)
+        out = ops.binary_matmul(jnp.asarray(x), jnp.asarray(w))
+        exp = ref.binary_matmul(jnp.asarray(x.astype(np.float32)),
+                                jnp.asarray(w.astype(np.float32)))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    @given(st.integers(0, 10_000), st.integers(1, 40), st.integers(1, 300))
+    @settings(max_examples=15, deadline=None)
+    def test_dot_range_property(self, seed, m, k):
+        """|dot| <= k and dot == k (mod 2) — xnor-popcount invariants."""
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((4, k)).astype(np.float32)
+        out = np.asarray(ops.binary_matmul(jnp.asarray(x), jnp.asarray(w)))
+        assert (np.abs(out) <= k).all()
+        assert ((out.astype(np.int64) - k) % 2 == 0).all()
+
+
+class TestHuffmanDecodeKernel:
+    @pytest.mark.parametrize("n", [100, 1024, 5000])
+    @pytest.mark.parametrize("gather", ["onehot", "bitplane"])
+    def test_vs_sequences(self, rng, n, gather):
+        vals = skewed_sequences(rng, n)
+        ct = compression.compress_sequences(vals, (n,), "gemm",
+                                            cluster=False)
+        ts = ct.tiled
+        tabs = ct.decode_tables()
+        if gather == "bitplane":
+            tabs = pack_bitplane_tables(tabs)
+        seqs = ops.decode_sequences(
+            jnp.asarray(ts.words), jnp.asarray(tabs), c=ts.c,
+            n_seqs=ts.n_seqs, gather=gather)
+        np.testing.assert_array_equal(np.asarray(seqs),
+                                      vals.astype(np.int32))
+
+    def test_random_uniform_sequences(self, rng):
+        """Uniform (incompressible) input exercises the escape node."""
+        vals = rng.integers(0, 512, size=2048, dtype=np.uint16)
+        ct = compression.compress_sequences(vals, (2048,), "gemm",
+                                            cluster=False)
+        seqs = ops.decode_sequences(
+            jnp.asarray(ct.tiled.words), jnp.asarray(ct.decode_tables()),
+            c=ct.tiled.c, n_seqs=2048)
+        np.testing.assert_array_equal(np.asarray(seqs),
+                                      vals.astype(np.int32))
+
+
+class TestFusedDecodeMatmul:
+    @pytest.mark.parametrize("m,n,k", [(4, 10, 100), (33, 45, 700),
+                                       (65, 64, 576)])
+    @pytest.mark.parametrize("cluster", [False, True])
+    def test_vs_oracle(self, rng, m, n, k, cluster):
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        wbits = rng.integers(0, 2, size=(n, k), dtype=np.uint8)
+        words, tabs, meta = ops.prepare_compressed_gemm(wbits,
+                                                        cluster=cluster)
+        out = ops.compressed_binary_matmul(
+            jnp.asarray(x), words, tabs, k_true=k, n_true=n)
+        wrec = compression.decompress_fused(
+            compression.compress_gemm_fused(wbits, cluster=cluster))
+        exp = ref.binary_matmul(
+            jnp.asarray(x), jnp.asarray(wrec.astype(np.float32) * 2 - 1))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    def test_bitplane_gather_equals_onehot(self, rng):
+        x = rng.standard_normal((16, 288)).astype(np.float32)
+        wbits = rng.integers(0, 2, size=(32, 288), dtype=np.uint8)
+        outs = []
+        for gather in ("onehot", "bitplane"):
+            words, tabs, meta = ops.prepare_compressed_gemm(
+                wbits, cluster=False, gather=gather)
+            outs.append(np.asarray(ops.compressed_binary_matmul(
+                jnp.asarray(x), words, tabs, k_true=288, n_true=32,
+                gather=gather)))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+class TestBinaryConv:
+    @pytest.mark.parametrize("hw,cin,cout,stride", [
+        ((8, 8), 32, 16, 1), ((9, 11), 64, 20, 2), ((5, 5), 96, 8, 1),
+    ])
+    def test_vs_reference_conv(self, rng, hw, cin, cout, stride):
+        x = rng.standard_normal((2, *hw, cin)).astype(np.float32)
+        w = rng.standard_normal((cout, cin, 3, 3)).astype(np.float32)
+        out = ops.binary_conv3x3(jnp.asarray(x), jnp.asarray(w),
+                                 stride=stride)
+        exp = ref.binary_conv3x3(jnp.asarray(x), jnp.asarray(w),
+                                 stride=stride)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    def test_compressed_conv(self, rng):
+        x = rng.standard_normal((1, 6, 6, 64)).astype(np.float32)
+        w = rng.standard_normal((24, 64, 3, 3)).astype(np.float32)
+        words, tabs, meta = ops.prepare_compressed_conv(
+            bitpack.to_bits(w), cluster=False)
+        out = ops.compressed_binary_conv3x3(
+            jnp.asarray(x), words, tabs, cin=64, cout=24)
+        exp = ref.binary_conv3x3(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+        assert meta["ratio_stream"] > 0.5       # random weights barely move
+
+
+class TestPackingMirrors:
+    @given(st.integers(0, 10_000), st.integers(1, 8), st.integers(9, 600))
+    @settings(max_examples=15, deadline=None)
+    def test_runtime_pack_equals_offline(self, seed, m, k):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        jnp_packed = np.asarray(ref.binarize_pack(jnp.asarray(x)))
+        np_packed = bitpack.pack_gemm_operand(bitpack.to_bits(x))
+        assert np.array_equal(jnp_packed, np_packed)
+
+
+class TestBinarizePackKernel:
+    @pytest.mark.parametrize("m,k", [(1, 9), (7, 100), (33, 288),
+                                     (130, 600), (513, 1000)])
+    def test_vs_oracle(self, rng, m, k):
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        got = ops.binarize_pack(jnp.asarray(x), use_kernel=True)
+        want = ref.binarize_pack(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_feeds_contraction(self, rng):
+        """Kernel-packed activations through the packed GEMM end-to-end."""
+        x = rng.standard_normal((20, 400)).astype(np.float32)
+        w = rng.standard_normal((12, 400)).astype(np.float32)
+        xw = ops.binarize_pack(jnp.asarray(x), use_kernel=True)
+        ww = ops.binarize_pack(jnp.asarray(w), use_kernel=True)
+        out = ops.binary_matmul_packed(xw, ww, 400)
+        exp = ref.binary_matmul(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_array_equal(
+            np.asarray(out).astype(np.float32), np.asarray(exp))

@@ -1,0 +1,173 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config, input_specs
+from repro.models.api import get_model
+
+REDUCED = {
+    "mamba2-780m": dict(num_layers=4, scan_repeats=4, d_model=64,
+                        ssm_heads=4, ssm_state=16, ssm_chunk=16, expand=2),
+    "gemma2-2b": dict(num_layers=4, scan_repeats=2, d_model=64, num_heads=4,
+                      num_kv_heads=2, head_dim=16, d_ff=128, window=16),
+    "minitron-8b": dict(num_layers=2, scan_repeats=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128),
+    "phi3-medium-14b": dict(num_layers=2, scan_repeats=2, d_model=64,
+                            num_heads=4, num_kv_heads=2, head_dim=16,
+                            d_ff=128),
+    "h2o-danube-1.8b": dict(num_layers=2, scan_repeats=2, d_model=64,
+                            num_heads=4, num_kv_heads=2, head_dim=16,
+                            d_ff=128, window=16),
+    # capacity_factor=8 -> no token drops, so decode == forward is exact
+    # (capacity-bounded MoE drops differently at t=48 vs t=2 by design)
+    "mixtral-8x22b": dict(num_layers=2, scan_repeats=2, d_model=64,
+                          num_heads=4, num_kv_heads=2, head_dim=16, d_ff=64,
+                          moe_d_ff=64, num_experts=4, top_k=2, window=16,
+                          capacity_factor=8.0),
+    "deepseek-v2-236b": dict(num_layers=3, prefix_kinds=("mla_dense",),
+                             scan_repeats=2, d_model=64, num_heads=4,
+                             num_kv_heads=4, head_dim=16, d_ff=128,
+                             moe_d_ff=32, num_experts=4,
+                             num_shared_experts=1, top_k=2, kv_lora_rank=16,
+                             q_lora_rank=24, rope_head_dim=8,
+                             nope_head_dim=16, v_head_dim=16,
+                             capacity_factor=8.0),
+    "recurrentgemma-2b": dict(num_layers=5, scan_repeats=1,
+                              suffix_kinds=("rglru", "rglru"), d_model=64,
+                              num_heads=4, num_kv_heads=1, head_dim=16,
+                              d_ff=128, lru_width=64, window=16),
+    "paligemma-3b": dict(num_layers=2, scan_repeats=2, d_model=64,
+                         num_heads=4, num_kv_heads=1, head_dim=16, d_ff=128,
+                         num_vision_tokens=8),
+    "whisper-large-v3": dict(num_layers=2, scan_repeats=2, encoder_layers=2,
+                             encoder_seq=16, d_model=64, num_heads=4,
+                             num_kv_heads=4, head_dim=16, d_ff=128),
+}
+
+
+def reduced(name):
+    return get_config(name).scaled(dtype="float32", vocab_size=128,
+                                   **REDUCED[name])
+
+
+def make_batch(cfg, b, s):
+    rng = np.random.default_rng(3)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.num_vision_tokens, cfg.d_model))
+            * 0.02, jnp.float32)
+    if cfg.family == "audio":
+        batch["frame_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)) * 0.02,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(REDUCED))
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = reduced(arch)
+        api = get_model(cfg)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        batch = make_batch(cfg, 2, 32)
+        loss, grads = jax.jit(jax.value_and_grad(
+            lambda p: api.loss_fn(cfg, p, batch)))(params)
+        assert np.isfinite(float(loss))
+        gn = sum(float(jnp.abs(g).sum())
+                 for g in jax.tree_util.tree_leaves(grads))
+        assert np.isfinite(gn) and gn > 0
+
+    def test_forward_shapes(self, arch):
+        cfg = reduced(arch)
+        api = get_model(cfg)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        batch = make_batch(cfg, 2, 32)
+        if cfg.family == "audio":
+            logits, _ = api.forward(cfg, params, batch["tokens"],
+                                    batch["frame_embeds"])
+            assert logits.shape == (2, 32, cfg.vocab_size)
+        elif cfg.family == "vlm":
+            logits, _ = api.forward(cfg, params, batch["tokens"],
+                                    vision_embeds=batch["vision_embeds"])
+            assert logits.shape == (2, 32 + cfg.num_vision_tokens,
+                                    cfg.vocab_size)
+        else:
+            logits, _ = api.forward(cfg, params, batch["tokens"])
+            assert logits.shape == (2, 32, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "h2o-danube-1.8b",
+                                  "mamba2-780m", "deepseek-v2-236b",
+                                  "recurrentgemma-2b", "whisper-large-v3"])
+def test_decode_matches_forward(arch):
+    """prefill(t[:L-1]) + decode(t[L-1]) must equal forward(t)[:, -1]."""
+    cfg = reduced(arch)
+    api = get_model(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 24
+    batch = make_batch(cfg, b, s)
+    toks = batch["tokens"]
+
+    if cfg.family == "audio":
+        full, _ = api.forward(cfg, params, toks, batch["frame_embeds"])
+    elif cfg.family == "vlm":
+        full, _ = api.forward(cfg, params, toks,
+                              vision_embeds=batch["vision_embeds"])
+    else:
+        full, _ = api.forward(cfg, params, toks)
+    expect = np.asarray(full[:, -1])
+
+    cache = api.init_cache(cfg, b, s + 8)
+    if cfg.family == "audio":
+        _, cache = api.prefill(cfg, params, toks[:, :-1], cache,
+                               batch["frame_embeds"])
+        pos = s - 1
+    elif cfg.family == "vlm":
+        _, cache = api.prefill(cfg, params, toks[:, :-1], cache,
+                               vision_embeds=batch["vision_embeds"])
+        pos = cfg.num_vision_tokens + s - 1
+    else:
+        _, cache = api.prefill(cfg, params, toks[:, :-1], cache)
+        pos = s - 1
+    got, _ = api.decode_step(cfg, params, cache, toks[:, -1:],
+                             jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(got[:, 0]), expect,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_swa_rolling_cache_beyond_window():
+    """Decode with a rolling window cache (prompt longer than window)."""
+    cfg = reduced("h2o-danube-1.8b").scaled(window=8)
+    api = get_model(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(2))
+    b, s = 1, 20
+    toks = jnp.asarray(np.random.default_rng(5).integers(
+        0, cfg.vocab_size, (b, s)), jnp.int32)
+    full, _ = api.forward(cfg, params, toks)
+    cache = api.init_cache(cfg, b, s + 4)   # spec clamps local cache to window
+    _, cache = api.prefill(cfg, params, toks[:, :-1], cache)
+    got, _ = api.decode_step(cfg, params, cache, toks[:, -1:],
+                             jnp.int32(s - 1))
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3)
+
+
+def test_input_specs_cover_all_cells():
+    for arch in REDUCED:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs
+            if shape.kind == "decode":
+                assert specs["tokens"].shape == (shape.global_batch, 1)
+            else:
+                assert specs["tokens"].shape == (shape.global_batch,
+                                                 shape.seq_len)

@@ -1,0 +1,194 @@
+"""Training substrate tests: optimizer, loss-decrease, gradient compression,
+fault tolerance (bad-step containment, straggler detection)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.dist import sharding as shd
+from repro.dist.compression_comm import (compress_grads,
+                                         init_error_feedback)
+from repro.dist.fault import FaultConfig, Supervisor
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh
+from repro.models.api import get_model
+from repro.train import optimizer as opt
+from tests.test_models import REDUCED, make_batch, reduced
+
+
+class TestOptimizer:
+    def test_adamw_reduces_quadratic(self):
+        oc = opt.OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                           total_steps=100)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = opt.init_state(params)
+        for _ in range(100):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = opt.apply_updates(params, grads, state, oc)
+        assert float(jnp.abs(params["w"]).max()) < 0.5
+
+    def test_grad_clip_and_schedule(self):
+        oc = opt.OptConfig(lr=1.0, grad_clip=1.0, warmup_steps=10,
+                           total_steps=100)
+        sched = opt.lr_schedule(oc)
+        assert float(sched(jnp.int32(0))) < float(sched(jnp.int32(10)))
+        assert float(sched(jnp.int32(100))) < float(sched(jnp.int32(10)))
+        params = {"w": jnp.zeros(3)}
+        state = opt.init_state(params)
+        _, _, metrics = opt.apply_updates(
+            params, {"w": jnp.full(3, 1e6)}, state, oc)
+        assert float(metrics["grad_norm"]) > 1e5   # measured pre-clip
+
+    def test_latent_clip(self):
+        oc = opt.OptConfig(lr=10.0, clip_latent=1.5, warmup_steps=0,
+                           weight_decay=0.0)
+        params = {"w": jnp.array([1.4])}
+        state = opt.init_state(params)
+        params, _, _ = opt.apply_updates(params, {"w": jnp.array([-9.9])},
+                                         state, oc)
+        assert float(params["w"][0]) <= 1.5
+
+
+class TestTrainLoop:
+    def test_tiny_lm_loss_decreases(self):
+        """Overfit one batch through the full jit'd step (sharded params,
+        chunked CE, AdamW): loss must fall fast and monotonically-ish."""
+        cfg = reduced("h2o-danube-1.8b")
+        mesh = make_host_mesh()
+        oc = opt.OptConfig(lr=3e-3, warmup_steps=0, total_steps=200,
+                           weight_decay=0.0)
+        with shd.use_mesh(mesh):
+            step_fn, _ = steps_mod.build_train_step(cfg, mesh, oc,
+                                                    donate=False)
+            state = steps_mod.init_train_state(cfg, mesh,
+                                               jax.random.PRNGKey(0))
+            data = SyntheticLM(cfg.vocab_size, 8, 64)
+            batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+            losses = []
+            for _ in range(25):
+                state, loss = step_fn(state, batch)
+                losses.append(float(loss))
+        assert losses[-1] < losses[0] - 2.0, losses
+
+
+class TestGradCompression:
+    def _run(self, mode):
+        mesh = make_host_mesh()
+        g = {"w": jnp.asarray(np.random.default_rng(0)
+                              .standard_normal((64, 32)).astype(np.float32))}
+        ef = init_error_feedback(g)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def f(gr, e):
+            return compress_grads(gr, e, ("data",), mode=mode)
+
+        specs = jax.tree_util.tree_map(lambda _: P(), g)
+        out, new_ef = shard_map(f, mesh=mesh, in_specs=(specs, specs),
+                                out_specs=(specs, specs),
+                                check_rep=False)(g, ef)
+        return g, out, new_ef
+
+    @pytest.mark.parametrize("mode", ["onebit", "int8"])
+    def test_signs_and_error_feedback(self, mode):
+        g, out, ef = self._run(mode)
+        # compressed result has the right signs (single replica = own signs)
+        s_in = np.sign(np.asarray(g["w"]))
+        s_out = np.sign(np.asarray(out["w"]))
+        frac = (s_in == s_out).mean()
+        assert frac > 0.95
+        # error feedback holds the residual: g = out + ef
+        np.testing.assert_allclose(np.asarray(out["w"] + ef["w"]),
+                                   np.asarray(g["w"]), rtol=1e-4, atol=1e-4)
+
+    def test_error_feedback_converges(self):
+        """Repeated compression of a constant gradient recovers its mean
+        magnitude on average (EF eliminates bias over steps)."""
+        g = jnp.asarray(np.random.default_rng(1)
+                        .standard_normal(4096).astype(np.float32))
+        ef = jnp.zeros_like(g)
+        acc = jnp.zeros_like(g)
+        from repro.dist.compression_comm import onebit_allreduce
+        mesh = make_host_mesh()
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def step(e):
+            return onebit_allreduce(g, e, ("data",))
+
+        for _ in range(60):
+            out, ef = shard_map(step, mesh=mesh, in_specs=(P(),),
+                                out_specs=(P(), P()),
+                                check_rep=False)(ef)
+            acc = acc + out
+        # per-step emission magnitude is the mean |g| scale, so EF can
+        # de-bias everything whose magnitude fits under it; the tail above
+        # the scale saturates by construction (signSGD property)
+        got = np.asarray(acc / 60)
+        want = np.asarray(g)
+        mask = np.abs(want) <= 1.0
+        assert mask.mean() > 0.5
+        np.testing.assert_allclose(got[mask], want[mask], atol=0.15)
+
+
+class TestFaultTolerance:
+    def test_bad_step_containment(self):
+        sup = Supervisor(FaultConfig(max_consecutive_bad=3))
+        state = {"w": jnp.zeros(2)}
+
+        calls = {"n": 0}
+
+        def step_fn(s, b):
+            calls["n"] += 1
+            loss = jnp.asarray(np.nan if b["bad"] else 1.0)
+            return {"w": s["w"] + 1}, loss
+
+        state, rep = sup.run_step(step_fn, state, {"bad": True}, 0)
+        assert rep.skipped and float(state["w"][0]) == 0.0   # update dropped
+        state, rep = sup.run_step(step_fn, state, {"bad": False}, 1)
+        assert not rep.skipped and float(state["w"][0]) == 1.0
+
+    def test_consecutive_bad_aborts(self):
+        sup = Supervisor(FaultConfig(max_consecutive_bad=2))
+        step_fn = lambda s, b: (s, jnp.asarray(np.nan))
+        state = {}
+        state, _ = sup.run_step(step_fn, state, {}, 0)
+        with pytest.raises(RuntimeError, match="consecutive bad"):
+            sup.run_step(step_fn, state, {}, 1)
+
+    def test_straggler_detection(self):
+        import time
+        sup = Supervisor(FaultConfig(straggler_factor=3.0))
+        fast = lambda s, b: (s, jnp.asarray(1.0))
+
+        def slow(s, b):
+            time.sleep(0.25)
+            return s, jnp.asarray(1.0)
+
+        state = {}
+        for i in range(6):
+            state, rep = sup.run_step(fast, state, {}, i)
+        state, rep = sup.run_step(slow, state, {}, 6)
+        assert rep.straggler and any("straggler" in e for e in sup.events)
+
+
+class TestDataPipeline:
+    def test_determinism_and_host_sharding(self):
+        a = SyntheticLM(1000, 16, 32, seed=7, host_id=0, num_hosts=4)
+        b = SyntheticLM(1000, 16, 32, seed=7, host_id=0, num_hosts=4)
+        assert np.array_equal(a.batch(5)["tokens"], b.batch(5)["tokens"])
+        c = SyntheticLM(1000, 16, 32, seed=7, host_id=1, num_hosts=4)
+        assert not np.array_equal(a.batch(5)["tokens"],
+                                  c.batch(5)["tokens"])
+        assert a.batch(0)["tokens"].shape == (4, 32)
+
+    def test_labels_learnable_map(self):
+        d = SyntheticLM(1000, 4, 16)
+        b = d.batch(0)
+        prev = np.roll(b["tokens"], 1, axis=1)
+        prev[:, 0] = 0
+        assert np.array_equal(b["labels"],
+                              (5 * b["tokens"] + 3 + prev) % 1000)
