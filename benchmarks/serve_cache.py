@@ -1,0 +1,77 @@
+"""Decode-tile cache capacity sweep: hit rate vs serving throughput.
+
+The paper's §IV caching unit works because its capacity covers the hot set
+of decoded sequences.  The serving-runtime analogue has the same cliff:
+during batched decoding every step touches every tile of every compressed
+layer (a cyclic scan), so an LRU cache smaller than the decoded working set
+thrashes to ~0% hit rate, while one that covers it converges to
+(steps-1)/steps.  This sweep measures that cliff and the throughput /
+HBM-traffic consequences, per cache capacity:
+
+  capacity (frac of working set) | hit rate | reconstructions/s | bytes streamed
+
+Run:  PYTHONPATH=src python benchmarks/serve_cache.py [--steps 24]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.runtime import DecodeTileCache, WeightStore
+
+LAYERS = 4
+D, F = 288, 512
+FRACTIONS = (0.1, 0.25, 0.5, 0.75, 1.0, 1.2)
+
+
+def build_store(cache: DecodeTileCache, rng) -> WeightStore:
+    """A stack of motif-structured binary MLP layers (C1-style skew)."""
+    params = {}
+    for i in range(LAYERS):
+        motifs = rng.standard_normal((4, D)).astype(np.float32)
+        base = motifs[rng.integers(0, 4, F)] * \
+            rng.choice([-1.0, 1.0], F)[:, None]
+        base += 0.08 * np.abs(base).mean() * rng.standard_normal((F, D))
+        params[f"layer{i}"] = {"mlp": {"up": base.T.astype(np.float32)}}
+    store = WeightStore(cache)
+    store.register_model("bench", params,
+                         select=lambda p, nd: p.endswith("mlp/up"))
+    return store
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+    rng = np.random.default_rng(0)
+
+    # working-set size from an unbounded dry run
+    probe = build_store(DecodeTileCache(), rng)
+    working_set = probe.decoded_bytes("bench")
+    n_tiles = probe.n_tiles("bench")
+    print(f"{LAYERS} layers x ({F}x{D}), {n_tiles} decode tiles, "
+          f"decoded working set {working_set / 1024:.0f} KiB, "
+          f"{args.steps} decode steps\n")
+    print(f"{'capacity':>10} {'frac':>5} | {'hit rate':>8} | "
+          f"{'recon/s':>8} | {'streamed':>10} | {'evict':>6}")
+
+    for frac in FRACTIONS:
+        rng = np.random.default_rng(0)          # identical weights per run
+        cache = DecodeTileCache(int(working_set * frac))
+        store = build_store(cache, rng)
+        t0 = time.monotonic()
+        for _ in range(args.steps):             # one materialise per step
+            store.materialize("bench")
+        dt = time.monotonic() - t0
+        st = cache.stats()
+        recon_s = args.steps * LAYERS / dt
+        print(f"{cache.capacity_bytes:>10} {frac:>5.2f} | "
+              f"{st['hit_rate'] * 100:>7.1f}% | {recon_s:>8.1f} | "
+              f"{st['bytes_streamed']:>10} | {st['evictions']:>6}")
+
+
+if __name__ == "__main__":
+    main()

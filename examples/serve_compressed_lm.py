@@ -1,24 +1,30 @@
-"""Paper technique -> LM serving (beyond-paper integration, DESIGN.md §5).
+"""Paper technique -> LM serving through the runtime (DESIGN.md §5).
 
-Binarises the MLP weights of a tiny LM (BNN mode), compresses them with the
-simplified Huffman coder, and serves batched requests with the weights
-decoded inside the fused Pallas kernel.  Reports the weight-streaming byte
-reduction — the decode-cell memory-roofline win measured in EXPERIMENTS.md
-§Perf (mixtral-8x22b decode_32k).
+Binarises the MLP weights of a tiny LM, registers them with the runtime
+WeightStore (compressed varlen stream layout), and serves batched requests
+two ways from the *same* store:
+
+  1. fused path  — weights Huffman-decoded inside the Pallas decode+GEMM
+     kernel (``ops.compressed_binary_matmul``), operands routed through
+     ``WeightStore.fused_operands``;
+  2. cached path — decoded tiles served from the DecodeTileCache and
+     reconstructed to sign * alpha weights (``WeightStore.materialize``).
+
+Both must agree bit-exactly, and the cache stats show the paper's reuse
+story: after the first step, tiles are hits, not re-decodes.
 
 Run:  PYTHONPATH=src python examples/serve_compressed_lm.py
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compression
 from repro.kernels import ops
+from repro.runtime import DecodeTileCache, WeightStore
 
 rng = np.random.default_rng(0)
 
-D, F, BATCH, CODES = 288, 1024, 8, 64
+D, F, BATCH, STEPS = 288, 1024, 8, 16
 
 # trained BNN weights develop sign structure (the paper's C1 observation);
 # rows sharing a handful of sign motifs + sparse noise reproduce it
@@ -27,29 +33,39 @@ sel = rng.integers(0, 4, F)
 sign = rng.choice([-1.0, 1.0], F)[:, None]
 base = motifs[sel] * sign
 base += 0.08 * np.abs(base).mean() * rng.standard_normal((F, D))
-w_bits = (base >= 0).astype(np.uint8)
+w = base.T.astype(np.float32)               # (D, F): d_in x d_out layout
 
-words, tables, meta = ops.prepare_compressed_gemm(w_bits, cluster=True,
-                                                  codes=CODES)
-packed_bytes = F * (-(-D // 288) * 288 // 32) * 4
-comp_bytes = int(np.asarray(words).size * 4)
+# -- register with the runtime store (stream layout; tiled lazily) ----------
+store = WeightStore(DecodeTileCache())
+params = {"mlp": {"up": w}}
+report = store.register_model("lm", params,
+                              select=lambda p, nd: p.endswith("mlp/up"))
 print(f"MLP up-projection {F}x{D}:")
-print(f"  packed 1-bit bytes      : {packed_bytes}")
-print(f"  compressed tiled bytes  : {comp_bytes} "
-      f"({packed_bytes / comp_bytes:.3f}x fewer)")
-print(f"  stream-layout ratio     : {meta['ratio_stream']:.3f}x")
+print(f"  packed 1-bit bytes      : {report['packed_bytes']}")
+print(f"  compressed stream bytes : {report['stream_bytes']} "
+      f"({report['ratio_stream']:.3f}x)")
 
-# batched "requests": sign activations through the compressed layer
+# -- fused path: decode inside the Pallas kernel, operands from the store ---
+words, tables, meta = store.fused_operands("lm", "mlp/up")
 x = rng.standard_normal((BATCH, D)).astype(np.float32)
-y = ops.compressed_binary_matmul(
-    jnp.asarray(x), words, tables, k_true=D, n_true=F, codes=CODES)
+y_fused = ops.compressed_binary_matmul(
+    jnp.asarray(x), words, tables, k_true=meta["k_true"],
+    n_true=meta["n_true"], codes=meta["codes"])
 
-# cross-check vs the uncompressed packed kernel on the clustered weights
-fc = compression.compress_gemm_fused(w_bits, cluster=True,
-                                     codes_per_sub=CODES)
-w_rec = compression.decompress_fused(fc).astype(np.float32) * 2 - 1
-y_ref = np.asarray(jnp.where(jnp.asarray(x) >= 0, 1.0, -1.0)
-                   @ jnp.asarray(w_rec).T)
-np.testing.assert_array_equal(np.asarray(y), y_ref)
-print(f"  served {BATCH} requests through the fused decode+GEMM kernel; "
-      "outputs match the reference  [OK]")
+# -- cached path: decode-tile cache -> reconstructed sign weights -----------
+for step in range(STEPS):                   # decode steps reuse the tiles
+    served = store.materialize("lm")
+w_rec = np.asarray(served["mlp"]["up"])     # (D, F) sign * alpha
+alpha = np.asarray(meta["scale"])           # (F,) per-output-channel scale
+y_cached = np.asarray(jnp.where(jnp.asarray(x) >= 0, 1.0, -1.0)
+                      @ (jnp.asarray(w_rec) / alpha[None, :]))
+
+np.testing.assert_array_equal(np.asarray(y_fused).astype(np.float32),
+                              y_cached)
+st = store.cache.stats()
+print(f"  served {BATCH} requests x {STEPS} steps; fused kernel == "
+      "cached-tile reconstruction  [OK]")
+print(f"  decode-tile cache       : {st['hits']} hits / {st['misses']} "
+      f"misses, hit-rate {st['hit_rate'] * 100:.1f}%")
+print(f"  compressed bytes streamed {st['bytes_streamed']}, "
+      f"avoided {st['bytes_avoided']}")

@@ -55,12 +55,17 @@ class TiledStream:
 
 @dataclasses.dataclass
 class CompressedTensor:
-    """A compressed binary weight tensor (one conv kernel or GEMM weight)."""
+    """A compressed binary weight tensor (one conv kernel or GEMM weight).
+
+    ``tiled`` may be None when compressed with ``tiled=False`` (storage-only
+    stream layout); the serving runtime re-tiles lazily via
+    :func:`tile_stream` on first use.
+    """
 
     assign: huffman.NodeAssignment
     stream_words: np.ndarray       # contiguous varlen stream (uint32)
     stream_bits: int
-    tiled: TiledStream
+    tiled: TiledStream | None
     seq_shape: tuple[int, ...]     # shape of the sequence array, e.g. (Cout, Cin)
     orig_shape: tuple[int, ...]    # shape of the original bit tensor
     kind: str                      # "conv3x3" | "gemm"
@@ -83,7 +88,7 @@ class CompressedTensor:
         return self.assign.decode_tables_flat()
 
 
-def _tile_stream(
+def tile_stream(
     seqs: np.ndarray,
     assign: huffman.NodeAssignment,
     s: int = DEFAULT_SUBSTREAMS,
@@ -128,6 +133,7 @@ def compress_sequences(
     n: int = clustering.DEFAULT_N,
     substreams: int = DEFAULT_SUBSTREAMS,
     codes_per_sub: int = DEFAULT_CODES_PER_SUB,
+    tiled: bool = True,
 ) -> CompressedTensor:
     seqs = np.asarray(seqs, dtype=np.uint16)
     repl = None
@@ -136,7 +142,8 @@ def compress_sequences(
     hist = frequency.sequence_histogram(seqs)
     assign = huffman.assign_nodes(hist)
     stream_words, stream_bits = huffman.encode_stream(seqs, assign)
-    tiled = _tile_stream(seqs, assign, s=substreams, c=codes_per_sub)
+    tiled = tile_stream(seqs, assign, s=substreams, c=codes_per_sub) \
+        if tiled else None
     return CompressedTensor(
         assign=assign,
         stream_words=stream_words,

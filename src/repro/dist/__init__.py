@@ -1,0 +1,7 @@
+"""Distribution layer: mesh context, sharding rules, compressed gradient
+collectives, and fault-tolerant step supervision.
+
+Model code talks to this package only through :func:`sharding.constrain`
+(a mesh-aware no-op off-mesh), so every model file runs unchanged on a
+single CPU device, the CI mesh, and the 16x16 production pod.
+"""

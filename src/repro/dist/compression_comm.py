@@ -1,0 +1,59 @@
+"""Compressed gradient exchange (1-bit / int8 allreduce with error feedback).
+
+The paper compresses *weights*; the training substrate reuses the same
+insight on the wire: inside a pure-DP ``shard_map`` the only cross-replica
+traffic is packed sign bits (+ one scale) or int8 levels per tensor.  Error
+feedback (Seide et al., 2014) carries the quantisation residual to the next
+step, so the compressed optimizer tracks the exact one in expectation.
+
+All functions run *inside* shard_map over the DP axes: ``axes`` names the
+mapped mesh axes for the psum/pmean collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def init_error_feedback(grads):
+    """Zero residual state, one leaf per gradient leaf."""
+    return jax.tree_util.tree_map(jnp.zeros_like, grads)
+
+
+def onebit_allreduce(g: jax.Array, ef: jax.Array, axes):
+    """1-bit compressed allreduce of one tensor -> (mean update, new ef).
+
+    Emits sign(v) * scale where v = g + ef and scale = global mean |v|;
+    the residual v - emitted stays local in the error-feedback state.
+    """
+    v = g + ef
+    scale = jax.lax.pmean(jnp.mean(jnp.abs(v)), axes)
+    scale = jnp.maximum(scale, _EPS)
+    signs = jnp.sign(v)
+    local = signs * scale                    # what this replica contributed
+    out = jax.lax.pmean(signs, axes) * scale
+    return out, v - local
+
+
+def int8_allreduce(g: jax.Array, ef: jax.Array, axes):
+    """int8 compressed allreduce: symmetric per-tensor quantisation."""
+    v = g + ef
+    scale = jax.lax.pmax(jnp.max(jnp.abs(v)), axes) / 127.0
+    scale = jnp.maximum(scale, _EPS)
+    q = jnp.clip(jnp.round(v / scale), -127, 127)
+    local = q * scale
+    out = jax.lax.pmean(q, axes) * scale
+    return out, v - local
+
+
+def compress_grads(grads, ef, axes, *, mode: str = "onebit"):
+    """Compress+exchange a gradient pytree -> (reduced grads, new ef)."""
+    fn = {"onebit": onebit_allreduce, "int8": int8_allreduce}[mode]
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    outs, efs = zip(*(fn(gl, el, axes) for gl, el in zip(flat_g, flat_e)))
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, efs))

@@ -1,0 +1,254 @@
+"""Sharding rules + mesh context (DESIGN.md §4/§5).
+
+Logical axis vocabulary: ``"batch"`` maps to the data-parallel mesh axes
+(``("pod", "data")`` when multi-pod, else ``("data",)``), ``"model"`` to the
+tensor-parallel axis.  :func:`constrain` is the only entry point model code
+uses — it is an exact no-op when no mesh is active (tests / shard_map
+bodies), so the model files stay importable and runnable on one CPU device.
+
+Every spec emitted here is *safe*: a mesh axis is only assigned to a tensor
+dimension it divides, so jit never sees an invalid sharding even for odd
+vocab sizes or reduced test configs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# active mesh, set by use_mesh(); None = mesh-less (constrain no-ops)
+_ACTIVE: list[Any] = []
+_DISABLED: list[bool] = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` for constrain() in this block (re-entrant)."""
+    _ACTIVE.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+@contextlib.contextmanager
+def no_mesh():
+    """Suspend constraints (e.g. inside shard_map bodies, already per-shard)."""
+    _DISABLED.append(True)
+    try:
+        yield
+    finally:
+        _DISABLED.pop()
+
+
+def current_mesh():
+    if _DISABLED or not _ACTIVE:
+        return None
+    return _ACTIVE[-1]
+
+
+# ---------------------------------------------------------------------------
+# axis bookkeeping
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, name: str) -> int:
+    try:
+        return int(mesh.shape.get(name, 1))
+    except AttributeError:
+        return 1
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Data-parallel mesh axes, outermost first."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return dp_axes(mesh)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def _entry_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= _axis_size(mesh, a)
+        return n
+    return _axis_size(mesh, entry)
+
+
+def _resolve(mesh, entry):
+    """Map a logical entry to concrete mesh axes ("batch" -> DP axes)."""
+    if entry is None:
+        return None
+    if isinstance(entry, (tuple, list)):
+        axes = tuple(a for e in entry for a in (_resolve_one(mesh, e) or ()))
+        return axes or None
+    one = _resolve_one(mesh, entry)
+    if one is None:
+        return None
+    return one if len(one) > 1 else one[0]
+
+
+def _resolve_one(mesh, name: str) -> tuple[str, ...] | None:
+    if name == "batch":
+        return dp_axes(mesh) or None
+    if name in mesh.axis_names:
+        return (name,)
+    return None
+
+
+def safe_spec(mesh, shape: tuple[int, ...], *axes) -> P:
+    """PartitionSpec with non-divisible / absent axes dropped to None."""
+    entries = list(axes) + [None] * (len(shape) - len(axes))
+    out = []
+    for dim, entry in zip(shape, entries[: len(shape)]):
+        resolved = _resolve(mesh, entry)
+        if resolved is not None and dim % _entry_size(mesh, resolved) == 0:
+            out.append(resolved)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint under the active mesh; identity off-mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = safe_spec(mesh, x.shape, *axes)
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def seq_shard_attention(q, k, v):
+    """Sequence-parallel attention layout: q rows sharded over "model",
+    k/v replicated (reduced per-device score block; DESIGN.md §4)."""
+    q = constrain(q, "batch", "model", None, None)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+# leaf names whose 2-d weight shards the OUTPUT (last) dim over "model"
+_COL_SHARDED = {
+    "wq", "wk", "wv", "up", "gate", "w_uq", "w_dq", "w_uk", "w_uv",
+    "w_x", "w_gate", "w_i", "w_r", "lm_head",
+}
+# leaf names whose 2-d weight shards the INPUT (first) dim over "model"
+_ROW_SHARDED = {"wo", "down", "w_out"}
+
+
+def _base_spec(leaf: str, shape: tuple[int, ...], mesh) -> tuple:
+    """Spec for the trailing (unstacked) dims of one parameter."""
+    model = _axis_size(mesh, "model")
+    nd = len(shape)
+    if nd <= 1:
+        return (None,) * nd
+    if nd == 3 and leaf.startswith("w_"):        # MoE expert weights (E, a, b)
+        e = shape[0]
+        if model > 1 and e % model == 0:         # true expert parallelism
+            return ("model", None, None)
+        # per-expert TP on the d_ff axis (gate/up: last dim; down: middle)
+        if leaf == "w_down":
+            return (None, "model", None)
+        return (None, None, "model")
+    if nd == 2:
+        if leaf == "embed":
+            return ("model", None) if shape[0] % max(model, 1) == 0 \
+                else (None, None)
+        if leaf in _COL_SHARDED:
+            return (None, "model")
+        if leaf in _ROW_SHARDED:
+            return ("model", None)
+    return (None,) * nd
+
+
+def param_spec(name: str, shape: tuple[int, ...], mesh,
+               *, fsdp: bool = False) -> P:
+    """Sharding spec of one named parameter (name = "/".join(tree path)).
+
+    Stacked scan-over-layers parameters carry extra *leading* dims; the rule
+    is matched on the leaf name and applied to the trailing dims.
+    """
+    leaf = name.rsplit("/", 1)[-1]
+    base = _base_spec(leaf, shape, mesh)
+    lead = len(shape) - len(base)
+    entries = [None] * lead + list(base)
+    # validate divisibility of the rule's choices
+    for i, (dim, entry) in enumerate(zip(shape, entries)):
+        if entry is not None and dim % _entry_size(mesh, entry) != 0:
+            entries[i] = None
+    if fsdp:
+        dp = dp_axes(mesh)
+        dsz = _dp_size(mesh)
+        if dp and len(shape) >= 2:
+            for i in range(lead, len(shape)):
+                if entries[i] is None and shape[i] % dsz == 0:
+                    entries[i] = tuple(dp)
+                    break
+    return P(*entries)
+
+
+def path_name(path) -> str:
+    """jax tree key path -> "a/b/0/c" string (shared naming convention)."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+_path_name = path_name
+
+
+def params_shardings(params_sds, mesh, *, fsdp: bool = False):
+    """Pytree of NamedShardings for a params pytree (of arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path_name(path), leaf.shape, mesh, fsdp=fsdp)),
+        params_sds)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def _leading_batch_spec(mesh, shape: tuple[int, ...]) -> P:
+    if not shape:
+        return P()
+    return safe_spec(mesh, shape, "batch")
+
+
+def batch_shardings(batch_sds, mesh):
+    """DP-shard the leading axis of every batch leaf; scalars replicated."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, _leading_batch_spec(mesh, leaf.shape)),
+        batch_sds)
+
+
+def cache_shardings(cache_sds, mesh):
+    """KV/state caches: batch-major leaves DP-sharded on the leading axis."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, _leading_batch_spec(mesh, leaf.shape)),
+        cache_sds)

@@ -122,7 +122,7 @@ def fused_decode_matmul(
             pltpu.VMEM((bm, bn), jnp.int32),
             pltpu.VMEM((codes, SUB), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(words, x_words, tables)

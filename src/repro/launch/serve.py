@@ -1,7 +1,14 @@
-"""Serving driver: batched prefill + decode loop with a KV cache.
+"""Serving driver on the compressed-weight runtime.
 
+Batched requests flow through the runtime scheduler (admit -> bucket ->
+prefill -> interleaved decode); the model's MLP projections are binarised,
+Huffman-compressed into the WeightStore, and reconstructed each step from
+the decode-tile cache — after the first step every tile is a cache hit, so
+weights are *reused*, not re-decoded per token.
+
+  PYTHONPATH=src python -m repro.launch.serve --scale tiny
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
-      --batch 4 --prompt-len 64 --gen 32
+      --batch 4 --prompt-len 64 --gen 32 --requests 8
 """
 
 from __future__ import annotations
@@ -10,15 +17,14 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import base as cfgs
 from repro.dist import sharding as shd
-from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import tiny_config
 from repro.models.api import get_model
+from repro.runtime import Scheduler, ServeEngine
 
 
 def main():
@@ -27,60 +33,66 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests to serve (default: one full batch)")
     ap.add_argument("--scale", choices=["tiny", "full"], default="tiny")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="decode-tile cache capacity in MiB (omit = "
+                         "unbounded; 0 = caching disabled, the no-cache "
+                         "baseline)")
+    ap.add_argument("--no-compress", action="store_true",
+                    help="uncompressed baseline on the same scheduler")
+    ap.add_argument("--log-every", type=int, default=16)
     args = ap.parse_args()
 
     cfg = tiny_config(args.arch) if args.scale == "tiny" \
         else cfgs.get_config(args.arch)
     mesh = make_host_mesh()
-    api = get_model(cfg)
-    max_len = args.prompt_len + args.gen + \
-        (cfg.num_vision_tokens if cfg.family == "vlm" else 0)
+    n_requests = args.requests or args.batch
+    cache_bytes = None if args.cache_mb is None \
+        else int(args.cache_mb * 2 ** 20)
 
     with shd.use_mesh(mesh):
-        params = api.init_params(cfg, jax.random.PRNGKey(0))
-        cache = api.init_cache(cfg, args.batch, max_len)
-        rng = np.random.default_rng(0)
-        tokens = jnp.asarray(rng.integers(
-            0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
-
-        extra = []
-        offset = args.prompt_len
-        if cfg.family == "vlm":
-            extra = [jnp.zeros((args.batch, cfg.num_vision_tokens,
-                                cfg.d_model), cfg.jnp_dtype)]
-            offset += cfg.num_vision_tokens
-        if cfg.family == "audio":
-            extra = [jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model),
-                               cfg.jnp_dtype)]
-
-        t0 = time.monotonic()
-        if cfg.family == "vlm":
-            logits, cache = api.prefill(cfg, params, tokens, cache,
-                                        vision_embeds=extra[0])
-        elif cfg.family == "audio":
-            logits, cache = api.prefill(cfg, params, tokens, cache, extra[0])
+        params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+        engine = ServeEngine(cfg, params, compress=not args.no_compress,
+                             cache_bytes=cache_bytes)
+        if engine.compressed:
+            rep = engine.report
+            print(f"weight store: {rep['layers']} compressed MLP tensors, "
+                  f"{rep['packed_bytes']} packed bytes -> "
+                  f"{rep['stream_bytes']} stream bytes "
+                  f"({rep['ratio_stream']:.3f}x)")
         else:
-            logits, cache = api.prefill(cfg, params, tokens, cache)
-        t_prefill = time.monotonic() - t0
+            print(f"weight store: no compressible MLPs in {args.arch}; "
+                  "serving uncompressed")
 
-        decode = jax.jit(lambda p, c, t, q: api.decode_step(cfg, p, c, t, q))
-        out_tokens = []
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        sched = Scheduler(engine, batch_size=args.batch,
+                          log_every=args.log_every)
+        rng = np.random.default_rng(0)
+        for _ in range(n_requests):
+            sched.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
+                         args.gen)
+
         t0 = time.monotonic()
-        for i in range(args.gen):
-            out_tokens.append(np.asarray(tok))
-            logits, cache = decode(params, cache, tok, jnp.int32(offset + i))
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        jax.block_until_ready(logits)
-        t_decode = time.monotonic() - t0
+        completed = sched.run()
+        wall = time.monotonic() - t0
 
-        gen = np.concatenate(out_tokens, axis=1)
-        assert np.isfinite(np.asarray(logits)).all()
-        print(f"prefill: {t_prefill:.2f}s for {args.batch}x{args.prompt_len}")
-        print(f"decode : {t_decode / args.gen * 1000:.1f} ms/token "
-              f"(batch {args.batch})")
-        print("sample token ids:", gen[0, :16].tolist())
+    m = engine.metrics
+    assert len(completed) == n_requests
+    assert all(len(r.generated) == r.max_new_tokens for r in completed)
+    print(f"served {len(completed)} requests in {wall:.2f}s "
+          f"({m.waves} waves, batch {args.batch})")
+    print(f"prefill: {m.prefill_s:.2f}s total")
+    print(f"decode : {m.ms_per_token():.1f} ms/step "
+          f"({m.tokens_per_s():.1f} tok/s)")
+    if engine.compressed:
+        st = engine.cache.stats()
+        print(f"decode-tile cache: {st['hits']} hits / {st['misses']} misses "
+              f"/ {st['evictions']} evictions")
+        print(f"cache hit-rate: {st['hit_rate'] * 100:.1f}%")
+        print(f"compressed bytes streamed: {st['bytes_streamed']}; "
+              f"bytes avoided by cache: {st['bytes_avoided']}")
+    print("sample token ids:", completed[0].generated[:16])
 
 
 if __name__ == "__main__":

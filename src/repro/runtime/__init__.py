@@ -1,0 +1,51 @@
+"""Compressed-weight serving runtime.
+
+Software analogue of the paper's evaluation hardware ("Exploiting Kernel
+Compression on BNNs"), module by module:
+
+  ===================  ====================================================
+  module               paper structure it mirrors
+  ===================  ====================================================
+  weight_store         DRAM weight storage: compressed varlen Huffman
+                       streams (§III layout); the fetch unit's re-blocking
+                       into substream-parallel decode tiles happens lazily
+                       on first use (stream -> tiled layout).
+  decode_cache         §IV caching unit: a small capacity-bounded store of
+                       *decoded* tiles beside the decoder.  The paper's C1
+                       observation (a few sequences dominate a trained
+                       BNN's kernels) is what makes a small cache effective
+                       in hardware; at serving time the reuse axis is
+                       temporal — every decode step re-reads every weight
+                       tile, so cached tiles turn all steps after the first
+                       into pure hits and the HBM stream traffic drops to
+                       the compressed footprint once.
+  scheduler            the evaluation pipeline driver: admits batched
+                       requests, groups them into length buckets, prefills,
+                       and interleaves decode steps (continuous batching);
+                       ServeEngine is the seam later PRs plug into
+                       (sharded stores, async prefetch, multi-backend).
+  metrics              the paper's measured quantities as counters:
+                       throughput, decode-cache hit rate, HBM bytes
+                       streamed vs avoided.
+  ===================  ====================================================
+
+The fused Pallas path (``kernels.fused_decode_contraction``) remains the
+in-kernel decoder (decode-on-the-fly, nothing cached); the runtime adds the
+complementary cached mode and serves both from one WeightStore so they stay
+bit-identical (tests/test_runtime.py round-trip).
+"""
+
+from repro.runtime.decode_cache import DecodeTileCache
+from repro.runtime.metrics import ServeMetrics
+from repro.runtime.scheduler import Request, Scheduler, ServeEngine
+from repro.runtime.weight_store import StoredLayer, WeightStore
+
+__all__ = [
+    "DecodeTileCache",
+    "Request",
+    "Scheduler",
+    "ServeEngine",
+    "ServeMetrics",
+    "StoredLayer",
+    "WeightStore",
+]

@@ -1,0 +1,130 @@
+"""Capacity-bounded cache of decoded weight tiles — the software analogue of
+the paper's §IV hardware caching unit.
+
+The hardware structure caches *decoded Huffman sequences* next to the
+decoder so the hot, frequency-skewed majority of codes is never re-decoded;
+here the unit of reuse is one decode tile (the (W, S) substream-parallel
+block the Pallas kernels consume), keyed ``(model, layer, tile)``.  During
+batched decoding every step touches every tile of every compressed layer,
+so a capacity that covers the decoded working set turns all steps after the
+first into pure cache hits — the measured hit rate is the direct software
+counterpart of the paper's decode-cell utilisation.
+
+Accounting:
+  * miss  -> ``bytes_streamed``  += compressed tile bytes (HBM words fetched
+             and pushed through the decoder);
+  * hit   -> ``bytes_avoided``   += the same compressed bytes (traffic +
+             decode work the cache absorbed);
+  * evictions are counted, and the resident decoded bytes are bounded by
+    ``capacity_bytes`` (LRU order, least-recently-used evicted first).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Hashable
+
+TileKey = Hashable   # canonically (model_id, layer_name, tile_index)
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: Any
+    nbytes: int
+    streamed_bytes: int     # compressed bytes needed to rebuild this tile
+
+
+class DecodeTileCache:
+    """LRU cache of decoded tiles with hit/miss/bytes accounting.
+
+    ``capacity_bytes=None`` means unbounded (serve everything from cache
+    after first decode); ``0`` disables caching entirely (every access is a
+    miss — the paper's no-cache baseline).
+    """
+
+    def __init__(self, capacity_bytes: int | None = None):
+        self.capacity_bytes = capacity_bytes
+        self._entries: collections.OrderedDict[TileKey, _Entry] = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_streamed = 0
+        self.bytes_avoided = 0
+        self.resident_bytes = 0
+
+    # -- core --------------------------------------------------------------
+    def get(self, key: TileKey):
+        """Decoded tile or None; counts the access and refreshes LRU order."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.bytes_avoided += entry.streamed_bytes
+        self._entries.move_to_end(key)
+        return entry.value
+
+    def put(self, key: TileKey, value, *, nbytes: int | None = None,
+            streamed_bytes: int = 0) -> None:
+        """Insert a freshly decoded tile (the decode's stream traffic is
+        charged here) and evict LRU entries beyond capacity."""
+        nbytes = int(getattr(value, "nbytes", 0) if nbytes is None else nbytes)
+        self.bytes_streamed += streamed_bytes
+        if key in self._entries:
+            self.resident_bytes -= self._entries.pop(key).nbytes
+        if self.capacity_bytes is not None and nbytes > self.capacity_bytes:
+            return                      # too large to ever cache
+        self._entries[key] = _Entry(value, nbytes, streamed_bytes)
+        self.resident_bytes += nbytes
+        if self.capacity_bytes is not None:
+            while self.resident_bytes > self.capacity_bytes and self._entries:
+                _, old = self._entries.popitem(last=False)
+                self.resident_bytes -= old.nbytes
+                self.evictions += 1
+
+    def get_or_decode(self, key: TileKey, decode: Callable[[], Any], *,
+                      streamed_bytes: int = 0):
+        """Fetch-through helper -> (value, was_hit)."""
+        value = self.get(key)
+        if value is not None:
+            return value, True
+        value = decode()
+        self.put(key, value, streamed_bytes=streamed_bytes)
+        return value, False
+
+    # -- introspection -----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: TileKey) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        """Keys in LRU order (least recently used first)."""
+        return list(self._entries.keys())
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate(),
+            "bytes_streamed": self.bytes_streamed,
+            "bytes_avoided": self.bytes_avoided,
+            "resident_bytes": self.resident_bytes,
+            "entries": len(self._entries),
+        }
+
+    def reset_counters(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+        self.bytes_streamed = self.bytes_avoided = 0
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.resident_bytes = 0

@@ -1,0 +1,70 @@
+"""Serving counters and the periodic stats line.
+
+One ServeMetrics instance per engine; the scheduler ticks it every decode
+step and asks for a stats line every ``log_every`` steps.  The cache-side
+counters (hits / misses / bytes) live on the DecodeTileCache itself and are
+merged into the line here, so one string answers the three questions the
+paper's evaluation asks: how fast, how often the decode cache hits, and how
+many HBM bytes the compressed path avoided streaming.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024.0 or unit == "TB":
+            return f"{n:.1f} {unit}"
+        n /= 1024.0
+    return f"{n:.1f} TB"
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    tokens_generated: int = 0
+    requests_completed: int = 0
+    requests_admitted: int = 0
+    decode_steps: int = 0
+    waves: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    _t0: float = dataclasses.field(default_factory=time.monotonic)
+
+    # -- recording ---------------------------------------------------------
+    def record_prefill(self, n_requests: int, dt: float) -> None:
+        self.requests_admitted += n_requests
+        self.prefill_s += dt
+        self.waves += 1
+
+    def record_decode_step(self, n_tokens: int, dt: float) -> None:
+        self.decode_steps += 1
+        self.tokens_generated += n_tokens
+        self.decode_s += dt
+
+    def record_completed(self, n_requests: int) -> None:
+        self.requests_completed += n_requests
+
+    # -- derived -----------------------------------------------------------
+    def tokens_per_s(self) -> float:
+        dt = self.decode_s
+        return self.tokens_generated / dt if dt > 0 else 0.0
+
+    def ms_per_token(self) -> float:
+        steps = self.decode_steps
+        return self.decode_s / steps * 1000.0 if steps else 0.0
+
+    def stats_line(self, cache=None) -> str:
+        parts = [
+            f"tokens {self.tokens_generated}",
+            f"{self.tokens_per_s():.1f} tok/s",
+            f"{self.ms_per_token():.1f} ms/step",
+            f"reqs {self.requests_completed}/{self.requests_admitted}",
+        ]
+        if cache is not None:
+            parts.append(f"cache hit-rate {cache.hit_rate() * 100:.1f}%")
+            parts.append(f"streamed {_fmt_bytes(cache.bytes_streamed)}, "
+                         f"avoided {_fmt_bytes(cache.bytes_avoided)}")
+        return " | ".join(parts)

@@ -1,0 +1,220 @@
+"""Runtime subsystem tests: decode-cache policy + accounting, weight-store
+round-trips (cached tiles == direct fused kernel), scheduler batching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression
+from repro.kernels import ops
+from repro.runtime import (DecodeTileCache, Scheduler, ServeEngine,
+                           WeightStore)
+from tests.test_models import reduced
+
+
+def make_store(rng, d=72, f=256, layers=1, cache=None, cluster=False):
+    params = {f"l{i}": {"mlp": {"up": rng.standard_normal(
+        (d, f)).astype(np.float32)}} for i in range(layers)}
+    store = WeightStore(cache if cache is not None else DecodeTileCache())
+    store.register_model("m", params, cluster=cluster,
+                         select=lambda p, nd: p.endswith("mlp/up"))
+    return store, params
+
+
+class TestDecodeTileCache:
+    def test_hit_miss_accounting(self):
+        c = DecodeTileCache()
+        assert c.get("a") is None and c.misses == 1 and c.hits == 0
+        c.put("a", np.zeros(4), streamed_bytes=100)
+        assert c.bytes_streamed == 100
+        assert c.get("a") is not None
+        assert c.hits == 1 and c.bytes_avoided == 100
+        assert c.hit_rate() == 0.5
+
+    def test_lru_eviction_order(self):
+        v = np.zeros(2, np.uint8)                      # 2 bytes each
+        c = DecodeTileCache(capacity_bytes=4)          # holds two entries
+        c.put("a", v)
+        c.put("b", v)
+        c.get("a")                                     # refresh a -> b is LRU
+        c.put("c", v)                                  # evicts b, not a
+        assert c.evictions == 1
+        assert "a" in c and "c" in c and "b" not in c
+        assert c.keys()[0] == "a"                      # c most recent
+
+    def test_capacity_bound_and_oversize(self):
+        v = np.zeros(8, np.uint8)
+        c = DecodeTileCache(capacity_bytes=20)
+        for k in range(4):
+            c.put(k, v)
+        assert c.resident_bytes <= 20 and len(c) == 2
+        c.put("big", np.zeros(64, np.uint8))           # larger than capacity
+        assert "big" not in c                          # never cached
+        assert c.resident_bytes <= 20
+
+    def test_zero_capacity_disables(self):
+        c = DecodeTileCache(capacity_bytes=0)
+        c.put("a", np.zeros(4))
+        assert c.get("a") is None and c.misses == 1
+
+    def test_get_or_decode(self):
+        c = DecodeTileCache()
+        calls = {"n": 0}
+
+        def decode():
+            calls["n"] += 1
+            return np.ones(4)
+
+        v1, hit1 = c.get_or_decode("k", decode, streamed_bytes=7)
+        v2, hit2 = c.get_or_decode("k", decode, streamed_bytes=7)
+        assert not hit1 and hit2 and calls["n"] == 1
+        np.testing.assert_array_equal(v1, v2)
+        assert c.bytes_streamed == 7 and c.bytes_avoided == 7
+
+
+class TestWeightStore:
+    def test_lazy_tiling(self, rng):
+        store, _ = make_store(rng)
+        (layer,) = [l for ls in store.layers("m").values() for l in ls]
+        assert layer.tiled is None                     # stream-only storage
+        store.materialize("m")
+        assert layer.tiled is not None                 # tiled on first use
+
+    @pytest.mark.parametrize("cluster", [False, True])
+    def test_reconstruction_matches_offline_decompress(self, rng, cluster):
+        store, params = make_store(rng, cluster=cluster)
+        w = params["l0"]["mlp"]["up"]
+        rec = np.asarray(store.materialize("m")["l0"]["mlp"]["up"])
+        (layer,) = [l for ls in store.layers("m").values() for l in ls]
+        bits = compression.decompress(layer.ct)        # stream-path oracle
+        expect = ((bits * 2.0 - 1.0) * layer.scale[:, None]).T
+        np.testing.assert_array_equal(rec, expect.astype(np.float32))
+        if not cluster:                                # lossless: exact signs
+            np.testing.assert_array_equal(rec == 0, np.zeros_like(w, bool))
+            np.testing.assert_array_equal(np.signbit(rec), np.signbit(
+                np.where(w >= 0, 1.0, -1.0)))
+
+    def test_cached_tiles_match_direct_fused_kernel(self, rng):
+        """Round trip: cache-served reconstruction == fused Pallas decode+GEMM
+        bit-for-bit (same store, same bits)."""
+        store, _ = make_store(rng, d=72, f=128)
+        words, tables, meta = store.fused_operands("m", "l0/mlp/up")
+        x = rng.standard_normal((5, 72)).astype(np.float32)
+        y_fused = np.asarray(ops.compressed_binary_matmul(
+            jnp.asarray(x), words, tables, k_true=meta["k_true"],
+            n_true=meta["n_true"], codes=meta["codes"]))
+        w_rec = np.asarray(store.materialize("m")["l0"]["mlp"]["up"])
+        signs = w_rec / np.asarray(meta["scale"])[None, :]   # +-1 matrix
+        y_cached = np.where(x >= 0, 1.0, -1.0) @ signs
+        np.testing.assert_array_equal(y_fused.astype(np.float32), y_cached)
+
+    def test_tile_reuse_across_steps(self, rng):
+        cache = DecodeTileCache()
+        store, _ = make_store(rng, layers=2, cache=cache)
+        store.materialize("m")
+        misses_first = cache.misses
+        assert cache.hits == 0 and misses_first == store.n_tiles("m")
+        first = store.materialize("m")
+        second = store.materialize("m")
+        assert cache.misses == misses_first            # no re-decode
+        assert cache.hits == 2 * misses_first
+        # memoised device arrays are reused, not rebuilt
+        for a, b in zip(jax.tree_util.tree_leaves(first),
+                        jax.tree_util.tree_leaves(second)):
+            assert a is b
+
+    def test_multi_model_keys_dont_collide(self, rng):
+        cache = DecodeTileCache()
+        store = WeightStore(cache)
+        for mid in ("a", "b"):
+            store.register_model(
+                mid, {"mlp": {"up": rng.standard_normal(
+                    (36, 64)).astype(np.float32)}})
+        store.materialize("a")
+        store.materialize("b")
+        assert cache.misses == store.n_tiles("a") + store.n_tiles("b")
+        assert cache.hits == 0
+
+
+class TestScheduler:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        cfg = reduced("minitron-8b")
+        params = jax.tree_util.tree_map(
+            np.asarray,
+            __import__("repro.models.api", fromlist=["get_model"])
+            .get_model(cfg).init_params(cfg, jax.random.PRNGKey(0)))
+        return ServeEngine(cfg, params, compress=True)
+
+    def test_engine_compresses_scan_mlps(self, engine):
+        assert engine.compressed
+        assert engine.report["layers"] >= 2            # stacked repeats split
+
+    def test_wave_serving_and_cache_hit_rate(self, engine):
+        engine.cache.reset_counters()
+        sched = Scheduler(engine, batch_size=2, log_every=0)
+        rng = np.random.default_rng(1)
+        for _ in range(2):
+            sched.submit(rng.integers(0, engine.cfg.vocab_size, 8), 12)
+        done = sched.run()
+        assert len(done) == 2
+        assert all(len(r.generated) == 12 and r.done for r in done)
+        # decoded tiles are reused, not re-decoded per token
+        assert engine.cache.hit_rate() >= 0.9
+        assert engine.metrics.tokens_generated == 24
+
+    def test_bucketing_splits_waves(self, engine):
+        sched = Scheduler(engine, batch_size=4, buckets=(8, 16))
+        rng = np.random.default_rng(2)
+        sched.submit(rng.integers(0, engine.cfg.vocab_size, 6), 2)
+        sched.submit(rng.integers(0, engine.cfg.vocab_size, 12), 2)
+        sched.submit(rng.integers(0, engine.cfg.vocab_size, 7), 2)
+        waves_before = engine.metrics.waves
+        done = sched.run()
+        assert len(done) == 3
+        # lengths 6 and 7 share the 8-bucket; 12 goes to the 16-bucket
+        assert engine.metrics.waves - waves_before == 2
+
+    def test_serving_logits_match_direct_eval(self):
+        """Bit-identical round trip at the logits level: scheduler serving
+        on cache-reconstructed weights == a direct decode loop on offline
+        stream-decompressed weights."""
+        cfg = reduced("minitron-8b")
+        from repro.models.api import get_model
+        params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(1))
+        engine = ServeEngine(cfg, params, compress=True)
+        prompt = np.random.default_rng(3).integers(0, cfg.vocab_size, 8)
+        sched = Scheduler(engine, batch_size=1, buckets=(8,))
+        req = sched.submit(prompt, 6)
+        sched.run()
+
+        # direct eval: same BNN cfg, weights rebuilt without the cache
+        cfg_b = engine.cfg
+        api = get_model(cfg_b)
+        direct = {}
+        for path, stack in engine.store.layers("lm").items():
+            recs = []
+            for layer in stack:
+                bits = compression.decompress(layer.ct)
+                recs.append((((bits * 2.0 - 1.0) * layer.scale[:, None]).T
+                             ).astype(np.float32))
+            direct[path] = np.stack(recs) if len(recs) > 1 else recs[0]
+
+        def sub(p, leaf):
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in p)
+            return jnp.asarray(direct[name]) if name in direct else leaf
+
+        params_direct = jax.tree_util.tree_map_with_path(sub, params)
+        cache = api.init_cache(cfg_b, 1, 8 + 6)
+        toks = jnp.asarray(prompt[None].astype(np.int32))
+        logits, kv = api.prefill(cfg_b, params_direct, toks, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out = []
+        for i in range(6):
+            out.append(int(tok[0, 0]))
+            logits, kv = api.decode_step(cfg_b, params_direct, kv, tok,
+                                         jnp.int32(8 + i))
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        assert req.generated == out
