@@ -1,14 +1,17 @@
 """Serving driver on the compressed-weight runtime.
 
-Batched requests flow through the runtime scheduler (admit -> bucket ->
-prefill -> interleaved decode); the model's MLP projections are binarised,
-Huffman-compressed into the WeightStore, and reconstructed each step from
-the decode-tile cache — after the first step every tile is a cache hit, so
-weights are *reused*, not re-decoded per token.
+Batched requests flow through the slot-level continuous-batching scheduler
+(per-slot prefill -> vmapped per-slot decode -> admit-on-retire); the
+model's MLP projections are binarised, Huffman-compressed into the
+WeightStore, and reconstructed each step from the decode-tile cache —
+after the first step every tile is a cache hit, so weights are *reused*,
+not re-decoded per token.  ``--mode wave`` reproduces the old
+wave-granular scheduling (token-identical, lower slot occupancy);
+``--policy`` picks the decode-cache eviction policy.
 
   PYTHONPATH=src python -m repro.launch.serve --scale tiny
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
-      --batch 4 --prompt-len 64 --gen 32 --requests 8
+      --batch 4 --prompt-len 64 --gen 32 --requests 8 --policy freq
 """
 
 from __future__ import annotations
@@ -25,6 +28,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.train import tiny_config
 from repro.models.api import get_model
 from repro.runtime import Scheduler, ServeEngine
+from repro.runtime.decode_cache import POLICIES
 
 
 def main():
@@ -40,6 +44,14 @@ def main():
                     help="decode-tile cache capacity in MiB (omit = "
                          "unbounded; 0 = caching disabled, the no-cache "
                          "baseline)")
+    ap.add_argument("--policy", choices=sorted(POLICIES), default="lru",
+                    help="decode-cache eviction policy")
+    ap.add_argument("--mode", choices=["continuous", "wave"],
+                    default="continuous",
+                    help="slot scheduling: continuous (admit-on-retire) or "
+                         "wave (drain before admitting, the old behavior)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable async next-layer tile prefetch")
     ap.add_argument("--no-compress", action="store_true",
                     help="uncompressed baseline on the same scheduler")
     ap.add_argument("--log-every", type=int, default=16)
@@ -55,7 +67,9 @@ def main():
     with shd.use_mesh(mesh):
         params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
         engine = ServeEngine(cfg, params, compress=not args.no_compress,
-                             cache_bytes=cache_bytes)
+                             cache_bytes=cache_bytes,
+                             cache_policy=args.policy,
+                             prefetch=not args.no_prefetch)
         if engine.compressed:
             rep = engine.report
             print(f"weight store: {rep['layers']} compressed MLP tensors, "
@@ -66,7 +80,7 @@ def main():
             print(f"weight store: no compressible MLPs in {args.arch}; "
                   "serving uncompressed")
 
-        sched = Scheduler(engine, batch_size=args.batch,
+        sched = Scheduler(engine, batch_size=args.batch, mode=args.mode,
                           log_every=args.log_every)
         rng = np.random.default_rng(0)
         for _ in range(n_requests):
@@ -81,17 +95,22 @@ def main():
     assert len(completed) == n_requests
     assert all(len(r.generated) == r.max_new_tokens for r in completed)
     print(f"served {len(completed)} requests in {wall:.2f}s "
-          f"({m.waves} waves, batch {args.batch})")
+          f"({args.mode} slots, batch {args.batch}, "
+          f"{m.prefills} prefills)")
     print(f"prefill: {m.prefill_s:.2f}s total")
     print(f"decode : {m.ms_per_token():.1f} ms/step "
-          f"({m.tokens_per_s():.1f} tok/s)")
+          f"({m.tokens_per_s():.1f} tok/s, "
+          f"occupancy {m.occupancy() * 100:.0f}%)")
     if engine.compressed:
         st = engine.cache.stats()
-        print(f"decode-tile cache: {st['hits']} hits / {st['misses']} misses "
-              f"/ {st['evictions']} evictions")
+        print(f"decode-tile cache ({st['policy']}): {st['hits']} hits / "
+              f"{st['misses']} misses / {st['evictions']} evictions")
         print(f"cache hit-rate: {st['hit_rate'] * 100:.1f}%")
         print(f"compressed bytes streamed: {st['bytes_streamed']}; "
               f"bytes avoided by cache: {st['bytes_avoided']}")
+        if engine.store.prefetch_dispatched:
+            print(f"tile prefetch: {engine.store.prefetch_dispatched} "
+                  f"dispatched, {engine.store.prefetch_used} consumed")
     print("sample token ids:", completed[0].generated[:16])
 
 

@@ -9,24 +9,32 @@ Compression on BNNs"), module by module:
   weight_store         DRAM weight storage: compressed varlen Huffman
                        streams (§III layout); the fetch unit's re-blocking
                        into substream-parallel decode tiles happens lazily
-                       on first use (stream -> tiled layout).
+                       on first use (stream -> tiled layout).  Async tile
+                       prefetch dispatches the next layer's decodes while
+                       the current layer reconstructs — the fetch unit
+                       running ahead of the compute pipeline.
   decode_cache         §IV caching unit: a small capacity-bounded store of
-                       *decoded* tiles beside the decoder.  The paper's C1
-                       observation (a few sequences dominate a trained
-                       BNN's kernels) is what makes a small cache effective
-                       in hardware; at serving time the reuse axis is
-                       temporal — every decode step re-reads every weight
-                       tile, so cached tiles turn all steps after the first
-                       into pure hits and the HBM stream traffic drops to
-                       the compressed footprint once.
-  scheduler            the evaluation pipeline driver: admits batched
-                       requests, groups them into length buckets, prefills,
-                       and interleaves decode steps (continuous batching);
-                       ServeEngine is the seam later PRs plug into
-                       (sharded stores, async prefetch, multi-backend).
+                       *decoded* tiles beside the decoder.  Eviction is
+                       pluggable (EvictionPolicy): LRU, LFU, and the
+                       paper-motivated FrequencyWeighted policy whose
+                       victims are ranked by observed accesses plus a
+                       static prior seeded from core.frequency occurrence
+                       counts — the paper's C1 observation (a few
+                       sequences dominate a trained BNN's kernels) turned
+                       into an eviction rule, so a one-off cold scan
+                       cannot flush the hot set the way it flushes LRU.
+  scheduler            the evaluation pipeline driver as slot-level
+                       continuous batching: a SlotPool of fixed decode
+                       slots, per-slot positions/KV lanes, batch-1
+                       exact-position prefill on admission, one vmapped
+                       decode step for all slots, admit-on-retire (a
+                       finished request is replaced before the next decode
+                       step).  mode="wave" reproduces the old
+                       wave-granular scheduling as a slot config; both
+                       modes are token-identical, only occupancy differs.
   metrics              the paper's measured quantities as counters:
-                       throughput, decode-cache hit rate, HBM bytes
-                       streamed vs avoided.
+                       throughput, slot occupancy, decode-cache hit rate,
+                       HBM bytes streamed vs avoided.
   ===================  ====================================================
 
 The fused Pallas path (``kernels.fused_decode_contraction``) remains the
@@ -35,17 +43,27 @@ complementary cached mode and serves both from one WeightStore so they stay
 bit-identical (tests/test_runtime.py round-trip).
 """
 
-from repro.runtime.decode_cache import DecodeTileCache
+from repro.runtime.decode_cache import (DecodeTileCache, EvictionPolicy,
+                                        FrequencyWeightedPolicy, LFUPolicy,
+                                        LRUPolicy, make_policy)
 from repro.runtime.metrics import ServeMetrics
-from repro.runtime.scheduler import Request, Scheduler, ServeEngine
+from repro.runtime.scheduler import (Request, Scheduler, ServeEngine, Slot,
+                                     SlotPool)
 from repro.runtime.weight_store import StoredLayer, WeightStore
 
 __all__ = [
     "DecodeTileCache",
+    "EvictionPolicy",
+    "FrequencyWeightedPolicy",
+    "LFUPolicy",
+    "LRUPolicy",
     "Request",
     "Scheduler",
     "ServeEngine",
     "ServeMetrics",
+    "Slot",
+    "SlotPool",
     "StoredLayer",
     "WeightStore",
+    "make_policy",
 ]

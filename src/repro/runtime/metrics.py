@@ -1,11 +1,19 @@
 """Serving counters and the periodic stats line.
 
-One ServeMetrics instance per engine; the scheduler ticks it every decode
-step and asks for a stats line every ``log_every`` steps.  The cache-side
-counters (hits / misses / bytes) live on the DecodeTileCache itself and are
-merged into the line here, so one string answers the three questions the
-paper's evaluation asks: how fast, how often the decode cache hits, and how
-many HBM bytes the compressed path avoided streaming.
+One ServeMetrics instance per engine; the scheduler ticks it every
+admission and decode step and asks for a stats line every ``log_every``
+steps.  The cache-side counters (hits / misses / bytes) live on the
+DecodeTileCache itself and are merged into the line here, so one string
+answers the questions the paper's evaluation asks: how fast, how full the
+slots run, how often the decode cache hits, and how many HBM bytes the
+compressed path avoided streaming.
+
+Slot-level accounting: ``slot_steps`` counts (decode step x active slot)
+pairs and ``capacity_steps`` counts (decode step x slot) pairs, so
+``occupancy()`` is the fraction of decode lanes that carried a live
+request — the quantity slot-level continuous batching raises over
+wave-granular scheduling (waves idle finished lanes until the wave
+drains).
 """
 
 from __future__ import annotations
@@ -27,21 +35,35 @@ class ServeMetrics:
     tokens_generated: int = 0
     requests_completed: int = 0
     requests_admitted: int = 0
+    prefills: int = 0
     decode_steps: int = 0
-    waves: int = 0
+    slot_steps: int = 0        # sum over decode steps of active slots
+    capacity_steps: int = 0    # sum over decode steps of total slots
+    waves: int = 0             # admission rounds (wave mode only)
     prefill_s: float = 0.0
     decode_s: float = 0.0
     _t0: float = dataclasses.field(default_factory=time.monotonic)
 
     # -- recording ---------------------------------------------------------
-    def record_prefill(self, n_requests: int, dt: float) -> None:
+    def record_admit(self, n_requests: int, dt: float,
+                     tokens: int = 0) -> None:
+        """One admission: batch-1 prefill of ``n_requests`` requests;
+        ``tokens`` counts the first generated token(s) prefill produced."""
         self.requests_admitted += n_requests
+        self.prefills += n_requests
         self.prefill_s += dt
+        self.tokens_generated += tokens
+
+    def record_wave(self) -> None:
+        """One drain-then-admit round (wave-mode scheduling only)."""
         self.waves += 1
 
-    def record_decode_step(self, n_tokens: int, dt: float) -> None:
+    def record_decode_step(self, n_tokens: int, dt: float,
+                           n_slots: int = 0) -> None:
         self.decode_steps += 1
         self.tokens_generated += n_tokens
+        self.slot_steps += n_tokens
+        self.capacity_steps += n_slots
         self.decode_s += dt
 
     def record_completed(self, n_requests: int) -> None:
@@ -49,12 +71,19 @@ class ServeMetrics:
 
     # -- derived -----------------------------------------------------------
     def tokens_per_s(self) -> float:
+        """Decode throughput: decode-step tokens over decode time (first
+        tokens come out of prefill and are excluded from both sides)."""
         dt = self.decode_s
-        return self.tokens_generated / dt if dt > 0 else 0.0
+        return self.slot_steps / dt if dt > 0 else 0.0
 
     def ms_per_token(self) -> float:
         steps = self.decode_steps
         return self.decode_s / steps * 1000.0 if steps else 0.0
+
+    def occupancy(self) -> float:
+        """Fraction of decode-lane steps that carried an active request."""
+        return self.slot_steps / self.capacity_steps \
+            if self.capacity_steps else 0.0
 
     def stats_line(self, cache=None) -> str:
         parts = [
@@ -63,6 +92,8 @@ class ServeMetrics:
             f"{self.ms_per_token():.1f} ms/step",
             f"reqs {self.requests_completed}/{self.requests_admitted}",
         ]
+        if self.capacity_steps:
+            parts.append(f"occupancy {self.occupancy() * 100:.0f}%")
         if cache is not None:
             parts.append(f"cache hit-rate {cache.hit_rate() * 100:.1f}%")
             parts.append(f"streamed {_fmt_bytes(cache.bytes_streamed)}, "

@@ -1,18 +1,28 @@
-"""Batched request scheduler + serving engine.
+"""Slot-level continuous batching: SlotPool + scheduler + serving engine.
 
-Turns the single-shot serve loop into a continuous-batching engine:
+The serving core is a **SlotPool** — a fixed set of decode slots, each one
+batch lane of a pooled per-slot KV cache.  Every per-request quantity the
+old wave loop shared across a batch is per-slot state here:
 
-  admit    — requests queue up (prompt + generation budget) and are grouped
-             into *waves* of up to ``batch_size`` sharing a length bucket;
-  pad      — prompts are left-padded to the bucket length so one compiled
-             prefill/decode pair serves the whole bucket;
-  prefill  — one batched prefill fills the wave's KV cache;
-  decode   — interleaved decode steps run all wave slots in lockstep; a slot
-             that exhausts its budget is masked out, and the wave retires
-             when every slot is done.  New waves then reuse the *same*
-             decoded weight tiles from the cache — hit rates carry across
-             waves, which is exactly the cross-invocation reuse the paper's
-             hardware cache provides.
+  admit    — a queued request takes any free slot: its prompt is prefilled
+             alone (batch-1, exact length, exact positions — no pad tokens
+             visible to attention, no RoPE shift) and the filled cache is
+             scattered into the slot's lane;
+  decode   — ONE jit(vmap(decode_step)) advances every slot with its own
+             position; slots at different depths of different requests
+             share each step's weight-tile fetch, so decoded-tile reuse is
+             continuous across request boundaries instead of resetting at
+             wave boundaries;
+  retire   — a slot whose request exhausted its budget frees immediately
+             and is refilled from the queue *before the next decode step*
+             (admit-on-retire), so finished requests never idle a lane.
+
+``mode="wave"`` reproduces the old wave-granular scheduling as a slot
+configuration: admission only happens when the pool has fully drained, so
+slots retire in place and freed lanes idle until the wave ends.  Both
+modes run the same per-slot decode, which is what makes them produce
+token-identical results (the scheduler equivalence test) — scheduling
+policy changes throughput, never content.
 
 Every decode step asks the WeightStore to materialise the serving params:
 on step 1 the tiles stream+decode (cache misses); from step 2 on they are
@@ -31,11 +41,12 @@ import numpy as np
 
 from repro.models.api import get_model
 from repro.runtime import weight_store as ws_mod
-from repro.runtime.decode_cache import DecodeTileCache
+from repro.runtime.decode_cache import DecodeTileCache, EvictionPolicy
 from repro.runtime.metrics import ServeMetrics
 from repro.runtime.weight_store import WeightStore
 
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+SLOT_LEN_QUANTUM = 16      # slot cache lengths round up to this many tokens
 
 
 @dataclasses.dataclass
@@ -57,15 +68,19 @@ class ServeEngine:
     ``compress=True`` binarises and Huffman-compresses the model's MLP
     projections into the store and serves in BNN-MLP mode
     (``cfg.binarize_mlp``); ``compress=False`` is the uncompressed baseline
-    on the same scheduler.
+    on the same scheduler.  ``cache_policy`` picks the decode-cache
+    eviction policy (``lru`` | ``lfu`` | ``freq`` or an EvictionPolicy
+    instance); ``prefetch`` toggles async next-layer tile prefetch.
     """
 
     def __init__(self, cfg, params, *, compress: bool = True,
                  cache_bytes: int | None = None, model_id: str = "lm",
                  cluster: bool = False,
+                 cache_policy: str | EvictionPolicy | None = None,
+                 prefetch: bool = True,
                  select: Callable[[str, int], bool] = ws_mod.default_select):
-        self.cache = DecodeTileCache(cache_bytes)
-        self.store = WeightStore(self.cache)
+        self.cache = DecodeTileCache(cache_bytes, policy=cache_policy)
+        self.store = WeightStore(self.cache, prefetch=prefetch)
         self.metrics = ServeMetrics()
         self.model_id = model_id
         self.compressed = False
@@ -83,6 +98,16 @@ class ServeEngine:
         # compressed serving keeps only the store's compressed streams +
         # memoised reconstructions; the originals are released
         self._raw_params = None if self.compressed else params
+        # per-slot decode: vmap gives every batch lane its own position and
+        # cache lane (leaves (S, 1, ...)); one compile per (S, slot_len).
+        # The pooled cache is donated — the KV update happens in place
+        # instead of copying every lane's cache each step.
+        self._slot_decode_jit = jax.jit(
+            jax.vmap(
+                lambda p, c, t, q: self.api.decode_step(self.cfg, p, c,
+                                                        t, q),
+                in_axes=(None, 0, 0, 0)),
+            donate_argnums=(1,))
         self._decode_jit = jax.jit(
             lambda p, c, t, q: self.api.decode_step(self.cfg, p, c, t, q))
 
@@ -118,7 +143,27 @@ class ServeEngine:
                                     vision_embeds=extra[0])
         return self.api.prefill(self.cfg, params, tokens, cache, *extra)
 
+    def prefill_request(self, params, prompt: np.ndarray, slot_len: int):
+        """Batch-1 exact-position prefill -> (first generated token, filled
+        slot cache with leaves (1, ...))."""
+        toks = jnp.asarray(np.asarray(prompt, np.int32)[None])
+        cache = self.api.init_cache(self.cfg, 1, slot_len)
+        logits, cache = self.prefill(params, toks, cache,
+                                     *self.extra_inputs(1))
+        if not bool(jnp.isfinite(logits[0, -1]).all()):
+            raise RuntimeError(
+                "non-finite prefill logits (compressed reconstruction or "
+                "model numerics are broken)")
+        return int(jnp.argmax(logits[0, -1])), cache
+
+    def slot_decode(self, params, pooled_cache, toks, poss):
+        """One decode step for every slot: toks (S, 1, 1) int32, poss (S,)
+        int32 -> (logits (S, 1, 1, V), new pooled cache)."""
+        return self._slot_decode_jit(params, pooled_cache, toks, poss)
+
     def decode_step(self, params, cache, tok, pos: int):
+        """Single shared-position decode (legacy path; slot serving goes
+        through :meth:`slot_decode`)."""
         return self._decode_jit(params, cache, tok, jnp.int32(pos))
 
     def stats_line(self) -> str:
@@ -126,18 +171,120 @@ class ServeEngine:
                                        else None)
 
 
+@dataclasses.dataclass
+class Slot:
+    """One decode lane: its request and per-slot decode state.
+
+    ``tok`` is the most recently generated token (already appended to the
+    request) and the next decode input; ``pos`` is its absolute position.
+    """
+
+    index: int
+    req: Request | None = None
+    pos: int = 0
+    tok: int = 0
+
+
+class SlotPool:
+    """Fixed decode slots over one pooled per-slot KV cache.
+
+    The pooled cache holds each slot's cache as batch lane ``index``
+    (leaves ``(n_slots, 1, ...)``); admission scatters a freshly prefilled
+    batch-1 cache into the lane, decode advances all lanes with per-slot
+    positions via the engine's vmapped step.  Free lanes keep decoding
+    (fixed shapes — same cost as the old full-wave step) but their output
+    is discarded and their state never leaks: admission overwrites the
+    whole lane.
+    """
+
+    def __init__(self, engine: ServeEngine, n_slots: int, slot_len: int):
+        self.engine = engine
+        self.n_slots = n_slots
+        self.slot_len = slot_len
+        self.slots = [Slot(i) for i in range(n_slots)]
+        specs = engine.api.init_cache_specs(engine.cfg, 1, slot_len)
+        self.cache = jax.tree_util.tree_map(
+            lambda s: jnp.zeros((n_slots, *s.shape), s.dtype), specs)
+        self._scatter = jax.jit(
+            lambda pool, new, i: jax.tree_util.tree_map(
+                lambda p, n: p.at[i].set(n.astype(p.dtype)), pool, new),
+            donate_argnums=(0,))
+
+    def free(self) -> list[Slot]:
+        return [s for s in self.slots if s.req is None]
+
+    def active(self) -> list[Slot]:
+        return [s for s in self.slots if s.req is not None]
+
+    def admit(self, req: Request, params) -> tuple[Slot, int]:
+        """Prefill ``req`` into a free slot -> (slot, first token)."""
+        slot = self.free()[0]
+        if self.engine.cache_len(req.prompt_len, req.max_new_tokens) \
+                > self.slot_len:
+            raise ValueError(
+                f"request {req.rid} needs "
+                f"{self.engine.cache_len(req.prompt_len, req.max_new_tokens)}"
+                f" cache positions > slot_len {self.slot_len}")
+        tok, cache1 = self.engine.prefill_request(params, req.prompt,
+                                                  self.slot_len)
+        self.cache = self._scatter(self.cache, cache1,
+                                   jnp.int32(slot.index))
+        slot.req = req
+        slot.tok = tok
+        slot.pos = self.engine.pos_offset(req.prompt_len)
+        return slot, tok
+
+    def retire(self, slot: Slot) -> None:
+        slot.req = None
+
+    def decode(self, params) -> list[tuple[Slot, int, bool]]:
+        """One vmapped decode step -> per active slot (slot, next token,
+        logits_finite); advances each active slot's (tok, pos)."""
+        active = self.active()
+        toks = np.zeros((self.n_slots, 1, 1), np.int32)
+        poss = np.zeros(self.n_slots, np.int32)
+        for s in active:
+            toks[s.index, 0, 0] = s.tok
+            poss[s.index] = s.pos
+        logits, self.cache = self.engine.slot_decode(
+            params, self.cache, jnp.asarray(toks), jnp.asarray(poss))
+        last = logits[:, 0, -1]                           # (S, V)
+        nxt = np.asarray(jnp.argmax(last, axis=-1)).astype(np.int32)
+        finite = np.asarray(jnp.isfinite(last).all(axis=-1))
+        out = []
+        for s in active:
+            s.pos += 1
+            s.tok = int(nxt[s.index])
+            out.append((s, s.tok, bool(finite[s.index])))
+        return out
+
+
 class Scheduler:
-    """Admit -> bucket -> prefill -> interleaved decode, wave after wave."""
+    """Admit -> per-slot prefill -> vmapped continuous decode.
+
+    ``mode="continuous"`` (default): admit-on-retire — any freed slot is
+    refilled from the queue before the next decode step.
+    ``mode="wave"``: the old wave-granular scheduling as a slot config —
+    admission waits until every slot has drained, and each admission round
+    takes up to ``batch_size`` queued requests sharing the head request's
+    length bucket (the old grouping).
+    """
 
     def __init__(self, engine: ServeEngine, *, batch_size: int = 4,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 mode: str = "continuous", slot_len: int | None = None,
                  log_every: int = 0, emit: Callable[[str], None] = print):
+        if mode not in ("continuous", "wave"):
+            raise ValueError(f"unknown scheduling mode {mode!r}")
         self.engine = engine
         self.batch_size = batch_size
         self.buckets = tuple(sorted(buckets))
+        self.mode = mode
+        self.slot_len = slot_len
         self.log_every = log_every
         self.emit = emit
         self._queue: list[Request] = []
+        self._pool: SlotPool | None = None
         self._next_rid = 0
 
     # -- admission ---------------------------------------------------------
@@ -159,74 +306,96 @@ class Scheduler:
                 return b
         return self.buckets[-1]
 
-    def _admit_wave(self) -> list[Request]:
+    def _wave_group(self) -> list[Request]:
         """Up to batch_size queued requests sharing the head's bucket."""
         head_bucket = self._bucket(self._queue[0].prompt_len)
-        wave, rest = [], []
+        group, rest = [], []
         for req in self._queue:
-            if len(wave) < self.batch_size and \
+            if len(group) < self.batch_size and \
                     self._bucket(req.prompt_len) == head_bucket:
-                wave.append(req)
+                group.append(req)
             else:
                 rest.append(req)
         self._queue = rest
-        return wave
+        return group
+
+    def _ensure_pool(self) -> SlotPool:
+        """(Re)build the pool when the queue needs longer slot caches;
+        reuse it otherwise so compiled decode shapes carry across runs."""
+        eng = self.engine
+        needed = max(eng.cache_len(r.prompt_len, r.max_new_tokens)
+                     for r in self._queue)
+        slot_len = self.slot_len or \
+            -(-needed // SLOT_LEN_QUANTUM) * SLOT_LEN_QUANTUM
+        if self._pool is None or self._pool.slot_len < slot_len or \
+                self._pool.n_slots != self.batch_size:
+            slot_len = max(slot_len, self._pool.slot_len if self._pool
+                           else 0)
+            self._pool = SlotPool(eng, self.batch_size, slot_len)
+        return self._pool
 
     # -- serving -----------------------------------------------------------
     def run(self) -> list[Request]:
         """Serve the queue to completion -> completed requests."""
+        if not self._queue:
+            return []
         completed: list[Request] = []
-        while self._queue:
-            completed.extend(self._run_wave(self._admit_wave()))
+        pool = self._ensure_pool()
+        while self._queue or pool.active():
+            self._admit(pool, completed)
+            if pool.active():
+                self._step(pool, completed)
         return completed
 
-    def _run_wave(self, wave: list[Request]) -> list[Request]:
-        eng = self.engine
-        m = eng.metrics
-        bucket = self._bucket(max(r.prompt_len for r in wave))
-        gen_budget = max(r.max_new_tokens for r in wave)
-        b = len(wave)
-        # Left-pad to the bucket length with token 0 so one compiled shape
-        # serves the bucket.  Deliberate wave-granularity simplification:
-        # pad tokens are visible to causal attention (no mask) and shift
-        # RoPE positions, so a prompt shorter than its bucket is served as
-        # if prefixed by pad tokens — exact per-request positions arrive
-        # with slot-level continuous batching (ROADMAP runtime item).
-        toks = np.zeros((b, bucket), np.int32)
-        for i, r in enumerate(wave):
-            toks[i, bucket - r.prompt_len:] = r.prompt
-
-        t0 = time.monotonic()
-        params = eng.step_params()
-        cache = eng.api.init_cache(eng.cfg, b,
-                                   eng.cache_len(bucket, gen_budget))
-        logits, cache = eng.prefill(params, jnp.asarray(toks), cache,
-                                    *eng.extra_inputs(b))
-        jax.block_until_ready(logits)
-        m.record_prefill(b, time.monotonic() - t0)
-
-        offset = eng.pos_offset(bucket)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        for step in range(gen_budget):
+    def _admit(self, pool: SlotPool, completed: list[Request]) -> None:
+        m = self.engine.metrics
+        if self.mode == "wave":
+            if pool.active() or not self._queue:
+                return                    # wave mode: drain before admitting
+            group = self._wave_group()[: pool.n_slots]
+            m.record_wave()
+        else:
+            group = None                  # continuous: straight FIFO
+        while self._queue or group:
+            if group is not None:
+                if not group:
+                    return
+                req = group.pop(0)
+            else:
+                if not pool.free():
+                    return
+                req = self._queue.pop(0)
             t0 = time.monotonic()
-            params = eng.step_params()
-            active = 0
-            for i, r in enumerate(wave):
-                if not r.done:
-                    r.generated.append(int(tok[i, 0]))
-                    active += 1
-                    if len(r.generated) >= r.max_new_tokens:
-                        r.done = True
-            logits, cache = eng.decode_step(params, cache, tok, offset + step)
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
-                .astype(jnp.int32)
-            jax.block_until_ready(tok)
-            m.record_decode_step(active, time.monotonic() - t0)
-            if self.log_every and m.decode_steps % self.log_every == 0:
-                self.emit(eng.stats_line())
-        if not bool(jnp.isfinite(logits[:, -1]).all()):
-            raise RuntimeError(
-                "non-finite logits in decode wave (compressed "
-                "reconstruction or model numerics are broken)")
-        m.record_completed(len(wave))
-        return wave
+            params = self.engine.step_params()
+            slot, tok = pool.admit(req, params)
+            req.generated.append(tok)
+            m.record_admit(1, time.monotonic() - t0, tokens=1)
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                pool.retire(slot)
+                completed.append(req)
+                m.record_completed(1)
+
+    def _step(self, pool: SlotPool, completed: list[Request]) -> None:
+        m = self.engine.metrics
+        t0 = time.monotonic()
+        params = self.engine.step_params()
+        results = pool.decode(params)
+        n_active = len(results)
+        for slot, tok, finite in results:
+            if not finite:
+                raise RuntimeError(
+                    f"non-finite logits in decode step for request "
+                    f"{slot.req.rid} (compressed reconstruction or model "
+                    f"numerics are broken)")
+            req = slot.req
+            req.generated.append(tok)
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                pool.retire(slot)         # admit-on-retire: lane refills
+                completed.append(req)     # before the next decode step
+                m.record_completed(1)
+        m.record_decode_step(n_active, time.monotonic() - t0,
+                             n_slots=pool.n_slots)
+        if self.log_every and m.decode_steps % self.log_every == 0:
+            self.emit(self.engine.stats_line())

@@ -18,6 +18,21 @@ Serving paths offered per registered layer:
   * :meth:`fused_operands` — device operands (words, tables, meta) for the
     fused decode+GEMM Pallas path (``kernels.ops.compressed_binary_matmul``),
     built from the *same* cached tiles so both paths are bit-identical.
+
+Two frequency-path features ride on the tile fetch:
+
+  * **prior seeding** — at first tiling, each tile's share of the layer's
+    sequence-occurrence mass (``core.frequency`` histogram, the paper's
+    §III-A skew) is pushed into the decode cache via ``seed_frequency`` so
+    the FrequencyWeighted eviction policy can rank tiles before any access
+    history exists;
+  * **async prefetch** — while one layer's tiles are being reconstructed on
+    the host, the *next* layer's missing tiles are already dispatched to the
+    device decoder (jax async dispatch), so the device decode of layer i+1
+    overlaps the host bit-unpack of layer i (the runtime analogue of the
+    paper's fetch unit running ahead of the compute pipeline).  Prefetch
+    changes latency only — hit/miss accounting and the decoded bits are
+    identical with it on or off.
 """
 
 from __future__ import annotations
@@ -30,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitpack, compression, huffman
+from repro.core import bitpack, compression, frequency, huffman
 from repro.dist.sharding import path_name
 from repro.kernels import ref
 from repro.kernels.huffman_decode import pack_bitplane_tables
@@ -61,6 +76,8 @@ class StoredLayer:
     # lazily materialised state
     tiled: compression.TiledStream | None = None
     tables: np.ndarray | None = None
+    tile_freq: np.ndarray | None = None   # per-tile occurrence mass
+    freq_seeded: bool = False
 
     def ensure_tiled(self) -> compression.TiledStream:
         """First-use re-tiling: stream -> substream-parallel layout."""
@@ -70,6 +87,18 @@ class StoredLayer:
                 count=self.ct.n_seqs)
             self.tiled = compression.tile_stream(seqs, self.ct.assign)
             self.tables = self.ct.decode_tables()
+            # per-tile frequency mass: how much of the layer's skewed
+            # sequence-occurrence histogram (paper §III-A) each decode tile
+            # carries -> static prior for FrequencyWeighted eviction.  Tail
+            # padding indexes a zero sentinel bin so pad slots add no mass
+            # (index 0 is the all-(-1) sequence, typically the hottest bin).
+            hist = np.append(frequency.sequence_histogram(seqs), 0)
+            per_tile = self.tiled.c * self.tiled.s
+            padded = np.full(self.tiled.n_tiles * per_tile,
+                             hist.size - 1, np.int64)
+            padded[: seqs.size] = seqs
+            self.tile_freq = hist[padded.reshape(
+                self.tiled.n_tiles, per_tile)].sum(axis=1)
         return self.tiled
 
     def tile_compressed_bytes(self) -> int:
@@ -88,6 +117,7 @@ class StoredLayer:
 class _ModelEntry:
     params: dict
     layers: dict[str, list[StoredLayer]]  # tree path -> per-repeat layers
+    stacked: dict[str, bool]              # tree path -> 3-d scan-stacked leaf
     memo: dict = dataclasses.field(default_factory=dict)
     fused_memo: dict = dataclasses.field(default_factory=dict)
 
@@ -98,10 +128,19 @@ def _decode_tile_jit(words, tables, c):
 
 
 class WeightStore:
-    """Registry: model id -> compressed layers, served through one cache."""
+    """Registry: model id -> compressed layers, served through one cache.
 
-    def __init__(self, cache: DecodeTileCache | None = None):
+    ``prefetch=True`` dispatches the next layer's missing tile decodes to
+    the device while the current layer's tiles are reconstructed on the
+    host (async tile prefetch; bit-identical results either way).
+    """
+
+    def __init__(self, cache: DecodeTileCache | None = None, *,
+                 prefetch: bool = False):
         self.cache = cache if cache is not None else DecodeTileCache()
+        self.prefetch = prefetch
+        self.prefetch_dispatched = 0
+        self.prefetch_used = 0
         self._models: dict[str, _ModelEntry] = {}
 
     # -- registration ------------------------------------------------------
@@ -119,6 +158,7 @@ class WeightStore:
         if model_id in self._models:
             raise ValueError(f"model {model_id!r} already registered")
         layers: dict[str, list[StoredLayer]] = {}
+        stacked: dict[str, bool] = {}
 
         def visit(path, leaf):
             name = path_name(path)
@@ -135,6 +175,7 @@ class WeightStore:
                 self._compress_tensor(f"{name}[{r}]", stack[r],
                                       cluster=cluster)
                 for r in range(stack.shape[0])]
+            stacked[name] = w.ndim == 3
             # the uncompressed original is NOT retained: only its
             # shape/dtype stub stays in the serving tree skeleton
             return jax.ShapeDtypeStruct(w.shape, w.dtype)
@@ -142,7 +183,8 @@ class WeightStore:
         skeleton = jax.tree_util.tree_map_with_path(visit, params)
         if not layers:
             raise ValueError("no weights matched the compression predicate")
-        self._models[model_id] = _ModelEntry(params=skeleton, layers=layers)
+        self._models[model_id] = _ModelEntry(params=skeleton, layers=layers,
+                                             stacked=stacked)
         return self.report(model_id)
 
     def _compress_tensor(self, name: str, w2: np.ndarray, *,
@@ -155,23 +197,58 @@ class WeightStore:
                            n=wt.shape[0], k=wt.shape[1], dtype=w2.dtype)
 
     # -- tile-level serving ------------------------------------------------
-    def _fetch_tiles(self, model_id: str, layer: StoredLayer
-                     ) -> tuple[list, bool]:
-        """All decode tiles of one layer via the cache ->
-        (tiles [(C, S) int32], any_tile_missed)."""
+    def _seed_layer(self, model_id: str, layer: StoredLayer) -> None:
+        """Push the layer's per-tile occurrence mass into the cache policy
+        (once) so FrequencyWeighted eviction can rank its tiles."""
+        if layer.freq_seeded:
+            return
+        for t in range(layer.tiled.n_tiles):
+            self.cache.seed_frequency((model_id, layer.name, t),
+                                      float(layer.tile_freq[t]))
+        layer.freq_seeded = True
+
+    def _prefetch_layer(self, model_id: str, layer: StoredLayer,
+                        pending: dict) -> None:
+        """Dispatch device decodes for the layer's missing tiles without
+        blocking (jax async dispatch); results land in ``pending``."""
         ts = layer.ensure_tiled()
+        missing = [t for t in range(ts.n_tiles)
+                   if (model_id, layer.name, t) not in self.cache
+                   and (model_id, layer.name, t) not in pending]
+        if not missing:
+            return                      # steady state: stay off the device
+        tables = jnp.asarray(layer.tables)
+        for t in missing:
+            pending[(model_id, layer.name, t)] = _decode_tile_jit(
+                jnp.asarray(ts.words[t]), tables, ts.c)
+            self.prefetch_dispatched += 1
+
+    def _fetch_tiles(self, model_id: str, layer: StoredLayer,
+                     pending: dict | None = None) -> tuple[list, bool]:
+        """All decode tiles of one layer via the cache ->
+        (tiles [(C, S) int32], any_tile_missed).
+
+        A miss consumes the prefetched in-flight decode when one exists
+        (same accounting as a direct decode: the stream bytes were spent)."""
+        ts = layer.ensure_tiled()
+        self._seed_layer(model_id, layer)
         comp_bytes = layer.tile_compressed_bytes()
         tiles = []
         any_miss = False
         for t in range(ts.n_tiles):
             key = (model_id, layer.name, t)
-            tile, hit = self.cache.get_or_decode(
-                key,
-                lambda t=t: np.asarray(_decode_tile_jit(
-                    jnp.asarray(ts.words[t]), jnp.asarray(layer.tables),
-                    ts.c)),
-                streamed_bytes=comp_bytes)
-            any_miss |= not hit
+            tile = self.cache.get(key)
+            if tile is None:
+                fut = pending.pop(key, None) if pending else None
+                if fut is not None:
+                    self.prefetch_used += 1
+                    tile = np.asarray(fut)
+                else:
+                    tile = np.asarray(_decode_tile_jit(
+                        jnp.asarray(ts.words[t]), jnp.asarray(layer.tables),
+                        ts.c))
+                self.cache.put(key, tile, streamed_bytes=comp_bytes)
+                any_miss = True
             tiles.append(tile)
         return tiles, any_miss
 
@@ -198,25 +275,37 @@ class WeightStore:
         cache hit and the memoised device arrays are returned as-is (the
         hit path only touches the cache for accounting — no bit unpack,
         reconstruction, or host->device transfer is repeated).
+
+        Layers are processed in registration order; with ``prefetch`` on,
+        layer i+1's missing tile decodes are dispatched right after layer
+        i's tiles are fetched, so they run on-device while layer i's
+        weights are reconstructed host-side.
         """
         entry = self._models[model_id]
-
-        def rebuild(path, leaf):
-            name = path_name(path)
-            stack = entry.layers.get(name)
-            if stack is None:
-                return leaf
-            fetched = [self._fetch_tiles(model_id, l) for l in stack]
+        names = list(entry.layers)
+        pending: dict = {}
+        rebuilt: dict = {}
+        for i, name in enumerate(names):
+            stack = entry.layers[name]
+            fetched = [self._fetch_tiles(model_id, l, pending)
+                       for l in stack]
+            if self.prefetch and i + 1 < len(names):
+                for nxt in entry.layers[names[i + 1]]:
+                    self._prefetch_layer(model_id, nxt, pending)
             if all(not miss for _, miss in fetched) and name in entry.memo:
-                return entry.memo[name]
+                rebuilt[name] = entry.memo[name]
+                continue
             arrs = [self._to_weights(l, tiles)
                     for l, (tiles, _) in zip(stack, fetched)]
-            out = jnp.asarray(arrs[0] if len(leaf.shape) == 2
-                              else np.stack(arrs))
+            out = jnp.asarray(np.stack(arrs) if entry.stacked[name]
+                              else arrs[0])
             entry.memo[name] = out
-            return out
+            rebuilt[name] = out
 
-        return jax.tree_util.tree_map_with_path(rebuild, entry.params)
+        def sub(path, leaf):
+            return rebuilt.get(path_name(path), leaf)
+
+        return jax.tree_util.tree_map_with_path(sub, entry.params)
 
     def fused_operands(self, model_id: str, path: str, repeat: int = 0,
                        *, gather: str = "onehot", codes: int | None = None):

@@ -1,0 +1,190 @@
+"""Property tests for core/huffman.py + core/bitpack.py.
+
+Two layers:
+
+* deterministic seeds (always run): every check function below is
+  exercised over a fixed seed grid, so the invariants are enforced even
+  where hypothesis isn't installed (tests/_hypothesis_compat.py);
+* hypothesis (CI): the same check functions driven by drawn seeds and
+  shapes, exploring the input space much more widely.
+
+Invariants:
+
+* encode -> decode is the identity for arbitrary weight bitmaps, through
+  both the code layer (encode_stream/decode_stream) and the packing layer
+  (gemm/conv/word round-trips);
+* compressed size respects the coder's bounds: never more than
+  MAX_CODE_LEN bits per sequence, and for bitmaps whose distinct-sequence
+  count fits the three table nodes (<= 160, guaranteed at the shapes drawn
+  here) the stream never exceeds the 9-bit channel-packed baseline — the
+  "compressed <= padded raw" guarantee the serving stack relies on.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import bitpack, compression, frequency, huffman
+from repro.core.bitpack import NUM_SEQUENCES, SEQ_BITS
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+# shapes whose sequence count (n * ceil(k/9) <= 144) fits inside the three
+# lookup nodes, so every occurring value gets a code of <= SEQ_BITS bits
+MAX_N, MAX_K = 16, 81
+
+SEED_GRID = [0, 1, 2, 3, 17, 255]
+
+
+def random_bitmap(seed: int, n: int, k: int, skew: bool) -> np.ndarray:
+    """(n, k) {0,1} bitmap; ``skew`` draws motif-structured rows (the
+    paper's C1 shape), else i.i.d. uniform bits (adversarial entropy)."""
+    rng = np.random.default_rng(seed)
+    if not skew:
+        return rng.integers(0, 2, (n, k)).astype(np.uint8)
+    motifs = rng.integers(0, 2, (2, k)).astype(np.uint8)
+    rows = motifs[rng.integers(0, 2, n)]
+    flips = rng.random((n, k)) < 0.05
+    return np.where(flips, 1 - rows, rows).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# check functions (shared by deterministic grid + hypothesis drivers)
+# ---------------------------------------------------------------------------
+
+def check_stream_roundtrip_and_bounds(bits: np.ndarray) -> None:
+    n, k = bits.shape
+    seqs = bitpack.gemm_to_sequences(bits)
+    hist = frequency.sequence_histogram(seqs)
+    assign = huffman.assign_nodes(hist)
+    words, nbits = huffman.encode_stream(seqs, assign)
+    out = huffman.decode_stream(words, nbits, assign, count=seqs.size)
+    np.testing.assert_array_equal(out, seqs.ravel())
+    # bit-level identity back to the original bitmap
+    np.testing.assert_array_equal(
+        bitpack.sequences_to_gemm(out.reshape(seqs.shape), k), bits)
+    # coder bounds: hard cap always; 9-bit baseline whenever every
+    # occurring sequence fits the lookup nodes (always at these shapes)
+    assert nbits <= seqs.size * huffman.MAX_CODE_LEN
+    distinct = int(np.unique(seqs).size)
+    if distinct <= sum(huffman.NODE_CAPS[:3]):
+        assert nbits <= seqs.size * SEQ_BITS, \
+            f"stream {nbits}b > padded raw {seqs.size * SEQ_BITS}b " \
+            f"({distinct} distinct sequences)"
+    # stored words cover exactly the stream (32-bit padding only)
+    assert words.size == -(-nbits // 32)
+
+
+def check_compress_gemm_roundtrip(bits: np.ndarray) -> None:
+    ct = compression.compress_gemm(bits, cluster=False, tiled=False)
+    np.testing.assert_array_equal(compression.decompress(ct), bits)
+    assert ct.stream_bits <= ct.n_seqs * huffman.MAX_CODE_LEN
+
+
+def check_conv_roundtrip(w_bits: np.ndarray) -> None:
+    seqs = bitpack.kernel_to_sequences(w_bits)
+    assert seqs.max(initial=0) < NUM_SEQUENCES
+    np.testing.assert_array_equal(bitpack.sequences_to_kernel(seqs), w_bits)
+
+
+def check_word_packing_roundtrip(bits_flat: np.ndarray) -> None:
+    words = bitpack.pack_bits(bits_flat)
+    assert words.dtype == np.uint32
+    np.testing.assert_array_equal(bitpack.unpack_bits(words), bits_flat)
+
+
+def check_gemm_operand_roundtrip(bits: np.ndarray) -> None:
+    words = bitpack.pack_gemm_operand(bits)
+    np.testing.assert_array_equal(
+        bitpack.unpack_gemm_operand(words, bits.shape[1]), bits)
+
+
+# ---------------------------------------------------------------------------
+# deterministic grid (runs with or without hypothesis)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEED_GRID)
+@pytest.mark.parametrize("skew", [False, True])
+def test_stream_roundtrip_grid(seed, skew):
+    rng = np.random.default_rng(seed + 1000)
+    n, k = int(rng.integers(1, MAX_N + 1)), int(rng.integers(1, MAX_K + 1))
+    check_stream_roundtrip_and_bounds(random_bitmap(seed, n, k, skew))
+
+
+@pytest.mark.parametrize("seed", SEED_GRID)
+def test_compress_gemm_roundtrip_grid(seed):
+    rng = np.random.default_rng(seed + 2000)
+    n, k = int(rng.integers(1, MAX_N + 1)), int(rng.integers(1, MAX_K + 1))
+    check_compress_gemm_roundtrip(random_bitmap(seed, n, k, True))
+
+
+@pytest.mark.parametrize("seed", SEED_GRID)
+def test_conv_and_packing_grid(seed):
+    rng = np.random.default_rng(seed + 3000)
+    cout, cin = int(rng.integers(1, 9)), int(rng.integers(1, 9))
+    check_conv_roundtrip(
+        rng.integers(0, 2, (cout, cin, 3, 3)).astype(np.uint8))
+    m = int(rng.integers(1, 5))
+    check_word_packing_roundtrip(
+        rng.integers(0, 2, (3, m * 32)).astype(np.uint8))
+    n, k = int(rng.integers(1, 7)), int(rng.integers(1, 400))
+    check_gemm_operand_roundtrip(rng.integers(0, 2, (n, k)).astype(np.uint8))
+
+
+def test_all_escape_bitmap_still_roundtrips():
+    """>160 distinct sequences forces escape codes; identity must hold and
+    the 12-bit hard cap is the only size guarantee left."""
+    seqs = np.arange(NUM_SEQUENCES, dtype=np.uint16).reshape(32, 16)
+    bits = bitpack.sequences_to_gemm(seqs, 16 * SEQ_BITS)
+    n, k = bits.shape
+    out_seqs = bitpack.gemm_to_sequences(bits)
+    np.testing.assert_array_equal(out_seqs, seqs)
+    hist = frequency.sequence_histogram(seqs)
+    assign = huffman.assign_nodes(hist)
+    words, nbits = huffman.encode_stream(seqs, assign)
+    out = huffman.decode_stream(words, nbits, assign, count=seqs.size)
+    np.testing.assert_array_equal(out, seqs.ravel())
+    assert nbits <= seqs.size * huffman.MAX_CODE_LEN
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers (skipped cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    seed_st = st.integers(min_value=0, max_value=2 ** 32 - 1)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=seed_st, n=st.integers(1, MAX_N), k=st.integers(1, MAX_K),
+           skew=st.booleans())
+    def test_stream_roundtrip_property(seed, n, k, skew):
+        check_stream_roundtrip_and_bounds(random_bitmap(seed, n, k, skew))
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=seed_st, n=st.integers(1, MAX_N), k=st.integers(1, MAX_K))
+    def test_compress_gemm_roundtrip_property(seed, n, k):
+        check_compress_gemm_roundtrip(random_bitmap(seed, n, k, True))
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=seed_st, cout=st.integers(1, 12), cin=st.integers(1, 12))
+    def test_conv_roundtrip_property(seed, cout, cin):
+        rng = np.random.default_rng(seed)
+        check_conv_roundtrip(
+            rng.integers(0, 2, (cout, cin, 3, 3)).astype(np.uint8))
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=seed_st, rows=st.integers(1, 5), m=st.integers(1, 6))
+    def test_word_packing_property(seed, rows, m):
+        rng = np.random.default_rng(seed)
+        check_word_packing_roundtrip(
+            rng.integers(0, 2, (rows, m * 32)).astype(np.uint8))
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=seed_st, n=st.integers(1, 8), k=st.integers(1, 600))
+    def test_gemm_operand_property(seed, n, k):
+        rng = np.random.default_rng(seed)
+        check_gemm_operand_roundtrip(
+            rng.integers(0, 2, (n, k)).astype(np.uint8))
+else:                                                 # pragma: no cover
+    @given()
+    def test_stream_roundtrip_property():
+        """Placeholder: skips with a clear reason when hypothesis is
+        missing (the deterministic grid above still runs)."""

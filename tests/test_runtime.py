@@ -1,5 +1,6 @@
-"""Runtime subsystem tests: decode-cache policy + accounting, weight-store
-round-trips (cached tiles == direct fused kernel), scheduler batching."""
+"""Runtime subsystem tests: decode-cache policies + accounting invariants,
+weight-store round-trips (cached tiles == direct fused kernel), slot-level
+scheduler batching + mode equivalence."""
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +11,7 @@ from repro.core import compression
 from repro.kernels import ops
 from repro.runtime import (DecodeTileCache, Scheduler, ServeEngine,
                            WeightStore)
+from repro.runtime.decode_cache import POLICIES
 from tests.test_models import reduced
 
 
@@ -71,6 +73,93 @@ class TestDecodeTileCache:
         assert not hit1 and hit2 and calls["n"] == 1
         np.testing.assert_array_equal(v1, v2)
         assert c.bytes_streamed == 7 and c.bytes_avoided == 7
+
+
+class TestEvictionPolicies:
+    """Invariants every policy must hold, plus per-policy behaviour."""
+
+    @pytest.mark.parametrize("policy", sorted(POLICIES))
+    def test_invariants_under_random_stream(self, policy, rng):
+        """resident <= capacity, resident == sum of live entry sizes,
+        hits + misses == accesses, bytes_avoided monotone — after every
+        single operation of a random access stream."""
+        capacity = 64
+        c = DecodeTileCache(capacity, policy=policy)
+        last_avoided = 0
+        universe = [f"k{i}" for i in range(24)]
+        sizes = {k: int(rng.integers(1, 33)) for k in universe}
+        for _ in range(600):
+            key = universe[int(rng.integers(len(universe)))]
+            if rng.random() < 0.5:
+                c.get(key)
+            else:
+                c.put(key, np.zeros(sizes[key], np.uint8),
+                      streamed_bytes=sizes[key])
+            assert c.resident_bytes <= capacity
+            assert c.resident_bytes == sum(
+                sizes[k] for k in universe if k in c)
+            assert c.hits + c.misses == c.accesses
+            assert c.bytes_avoided >= last_avoided
+            last_avoided = c.bytes_avoided
+            assert sorted(c.keys()) == sorted(k for k in universe if k in c)
+
+    @pytest.mark.parametrize("policy", sorted(POLICIES))
+    def test_zero_capacity_zero_hit_rate(self, policy):
+        c = DecodeTileCache(0, policy=policy)
+        for i in range(20):
+            c.put(i % 5, np.zeros(4, np.uint8))
+            assert c.get(i % 5) is None
+        assert c.hit_rate() == 0.0 and len(c) == 0
+
+    @pytest.mark.parametrize("policy", sorted(POLICIES))
+    def test_update_existing_key_exact_accounting(self, policy):
+        """Regression: re-inserting a key must replace it exactly — the old
+        nbytes released, never double-counted against capacity."""
+        c = DecodeTileCache(100, policy=policy)
+        c.put("a", np.zeros(40, np.uint8))
+        c.put("b", np.zeros(30, np.uint8))
+        assert c.resident_bytes == 70
+        c.put("a", np.zeros(40, np.uint8))       # same size re-insert
+        assert c.resident_bytes == 70 and len(c) == 2
+        assert c.evictions == 0                  # a 2nd 40 would have evicted
+        c.put("a", np.zeros(10, np.uint8))       # shrink in place
+        assert c.resident_bytes == 40
+        c.put("a", np.zeros(60, np.uint8))       # grow in place, still fits
+        assert c.resident_bytes == 90 and c.evictions == 0
+        c.put("a", np.zeros(200, np.uint8))      # grow past capacity:
+        assert "a" not in c                      # dropped, bytes released
+        assert c.resident_bytes == 30 and len(c) == 1
+
+    def test_lfu_keeps_frequent_over_recent(self):
+        v = np.zeros(2, np.uint8)
+        c = DecodeTileCache(4, policy="lfu")
+        c.put("hot", v)
+        for _ in range(5):
+            c.get("hot")
+        c.put("cold1", v)
+        c.put("cold2", v)                        # evicts cold1, not hot
+        assert "hot" in c and "cold2" in c and "cold1" not in c
+
+    def test_freq_prior_pins_hot_through_cold_scan(self):
+        """The paper-skew policy: seeded-hot tiles survive a one-off cold
+        scan that flushes LRU completely."""
+        v = np.zeros(2, np.uint8)
+        hot = [("hot", i) for i in range(4)]
+        for policy, expect_hot in (("freq", True), ("lru", False)):
+            c = DecodeTileCache(10, policy=policy)
+            for k in hot:
+                c.seed_frequency(k, 100.0)
+            for k in hot:
+                c.put(k, v)
+            for i in range(40):                  # cold scan, each key once
+                c.put(("cold", i), v)
+            resident = [k in c for k in hot]
+            assert all(resident) == expect_hot
+            if expect_hot:                       # hot re-access hits
+                hits_before = c.hits
+                for k in hot:
+                    assert c.get(k) is not None
+                assert c.hits == hits_before + len(hot)
 
 
 class TestWeightStore:
@@ -165,7 +254,8 @@ class TestScheduler:
         assert engine.metrics.tokens_generated == 24
 
     def test_bucketing_splits_waves(self, engine):
-        sched = Scheduler(engine, batch_size=4, buckets=(8, 16))
+        sched = Scheduler(engine, batch_size=4, buckets=(8, 16),
+                          mode="wave")
         rng = np.random.default_rng(2)
         sched.submit(rng.integers(0, engine.cfg.vocab_size, 6), 2)
         sched.submit(rng.integers(0, engine.cfg.vocab_size, 12), 2)
@@ -175,6 +265,55 @@ class TestScheduler:
         assert len(done) == 3
         # lengths 6 and 7 share the 8-bucket; 12 goes to the 16-bucket
         assert engine.metrics.waves - waves_before == 2
+
+    def test_mode_and_order_equivalence(self, engine):
+        """Same request set -> identical tokens under wave mode,
+        continuous mode, and shuffled admission order: per-slot exact
+        positions make generation independent of batch neighbours."""
+        rng = np.random.default_rng(5)
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g)
+                for L, g in [(5, 7), (8, 2), (11, 5), (6, 9)]]
+
+        def serve(mode, order):
+            sched = Scheduler(engine, batch_size=2, mode=mode,
+                              buckets=(16,))
+            rids = {}
+            for i in order:
+                rids[sched.submit(*reqs[i]).rid] = i
+            done = sched.run()
+            return {rids[r.rid]: tuple(r.generated) for r in done}
+
+        wave = serve("wave", [0, 1, 2, 3])
+        cont = serve("continuous", [0, 1, 2, 3])
+        shuf = serve("continuous", [2, 0, 3, 1])
+        assert wave == cont == shuf
+        assert sorted(len(v) for v in wave.values()) == [2, 5, 7, 9]
+
+    def test_admit_on_retire_raises_occupancy(self, engine):
+        """Heterogeneous budgets: continuous batching refills retired
+        slots mid-decode, finishing in fewer decode steps than wave mode
+        while producing the same tokens."""
+        rng = np.random.default_rng(6)
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, 6), g)
+                for g in (2, 8, 3, 7)]
+        stats = {}
+        for mode in ("wave", "continuous"):
+            sched = Scheduler(engine, batch_size=2, mode=mode)
+            steps0 = engine.metrics.decode_steps
+            slot0 = engine.metrics.slot_steps
+            cap0 = engine.metrics.capacity_steps
+            for r in reqs:
+                sched.submit(*r)
+            done = sched.run()
+            assert len(done) == 4
+            stats[mode] = (engine.metrics.decode_steps - steps0,
+                           engine.metrics.slot_steps - slot0,
+                           engine.metrics.capacity_steps - cap0)
+        # same generated-token total, fewer decode steps, higher occupancy
+        assert stats["continuous"][1] == stats["wave"][1]
+        assert stats["continuous"][0] < stats["wave"][0]
+        occ = {m: s[1] / s[2] for m, s in stats.items()}
+        assert occ["continuous"] > occ["wave"]
 
     def test_serving_logits_match_direct_eval(self):
         """Bit-identical round trip at the logits level: scheduler serving
