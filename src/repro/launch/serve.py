@@ -7,11 +7,15 @@ WeightStore, and reconstructed each step from the decode-tile cache —
 after the first step every tile is a cache hit, so weights are *reused*,
 not re-decoded per token.  ``--mode wave`` reproduces the old
 wave-granular scheduling (token-identical, lower slot occupancy);
-``--policy`` picks the decode-cache eviction policy.
+``--policy`` picks the decode-cache eviction policy;
+``--prefill-chunk`` interleaves prompt chunks with decode steps and
+``--kv-page-size`` backs the KV lanes with demand-allocated pages —
+both token-identical to the monolithic defaults.
 
   PYTHONPATH=src python -m repro.launch.serve --scale tiny
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
-      --batch 4 --prompt-len 64 --gen 32 --requests 8 --policy freq
+      --batch 4 --prompt-len 64 --gen 32 --requests 8 --policy freq \
+      --prefill-chunk 16 --kv-page-size 16
 """
 
 from __future__ import annotations
@@ -50,6 +54,22 @@ def main():
                     default="continuous",
                     help="slot scheduling: continuous (admit-on-retire) or "
                          "wave (drain before admitting, the old behavior)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prompts into chunks of this many tokens, "
+                         "interleaved with decode steps (omit = monolithic "
+                         "batch-1 prefill at admission)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prefill tokens per scheduler iteration "
+                         "(default: one chunk); bounds decode-latency "
+                         "impact of long prompts")
+    ap.add_argument("--kv-page-size", type=int, default=None,
+                    help="back KV lanes with pages of this many tokens, "
+                         "allocated on demand (omit = monolithic "
+                         "slot_len lanes)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="physical page-pool size (default: fully backs "
+                         "every slot; smaller = overcommit, admission "
+                         "defers when reservations fail)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable async next-layer tile prefetch")
     ap.add_argument("--no-compress", action="store_true",
@@ -81,6 +101,10 @@ def main():
                   "serving uncompressed")
 
         sched = Scheduler(engine, batch_size=args.batch, mode=args.mode,
+                          prefill_chunk=args.prefill_chunk,
+                          prefill_budget=args.prefill_budget,
+                          kv_page_size=args.kv_page_size,
+                          kv_pages=args.kv_pages,
                           log_every=args.log_every)
         rng = np.random.default_rng(0)
         for _ in range(n_requests):
@@ -97,10 +121,22 @@ def main():
     print(f"served {len(completed)} requests in {wall:.2f}s "
           f"({args.mode} slots, batch {args.batch}, "
           f"{m.prefills} prefills)")
-    print(f"prefill: {m.prefill_s:.2f}s total")
+    ttfts = [r.first_token_latency() for r in completed]
+    ttft = sum(t for t in ttfts if t is not None) / max(len(ttfts), 1)
+    print(f"prefill: {m.prefill_s:.2f}s total "
+          f"(mean time-to-first-token {ttft * 1000:.0f} ms)")
+    if m.prefill_chunks:
+        print(f"chunked prefill: {m.prefill_chunks} chunks of "
+              f"<= {args.prefill_chunk} tokens, "
+              f"{m.prefill_chunk_ms():.1f} ms/chunk, decode stalled "
+              f"{m.decode_stall_s:.2f}s behind chunks")
     print(f"decode : {m.ms_per_token():.1f} ms/step "
           f"({m.tokens_per_s():.1f} tok/s, "
           f"occupancy {m.occupancy() * 100:.0f}%)")
+    if m.pages_total:
+        print(f"kv pages: {args.kv_page_size}-token pages, pool "
+              f"{m.pages_total}, mean occupancy "
+              f"{m.page_occupancy() * 100:.0f}%")
     if engine.compressed:
         st = engine.cache.stats()
         print(f"decode-tile cache ({st['policy']}): {st['hits']} hits / "

@@ -21,6 +21,28 @@ class ModelAPI:
     decode_step: Callable[..., Any]          # (cfg, params, cache, tok, pos)
     init_cache_specs: Callable[..., Any]
     init_cache: Callable[..., Any]
+    prefill_chunk: Callable[..., Any] | None = None
+    # (cfg, params, cache, tokens (B, S), pos) -> (last logits, new cache);
+    # None when the family cannot resume a prompt mid-cache (encoder-decoder)
+
+
+# block kinds whose caches can resume a prompt mid-prefill (attention-style
+# KV caches); recurrent states (ssm / rglru) and cross-attention decoders
+# cannot, so configs containing them fall back to monolithic prefill
+CHUNKABLE_KINDS = frozenset(
+    ("attn", "swa", "local", "global", "attn_local",
+     "mla_dense", "mla_moe", "swa_moe", "moe"))
+
+
+def supports_chunked_prefill(cfg) -> bool:
+    """True if ``cfg`` can run :func:`transformer.prefill_chunk`: every
+    block kind keeps an attention-style cache and there is no multimodal
+    prefix spliced into the prompt (vlm / audio)."""
+    if cfg.family in ("vlm", "audio"):
+        return False
+    kinds = (tuple(cfg.prefix_kinds) + tuple(cfg.scan_pattern)
+             + tuple(cfg.suffix_kinds))
+    return all(k in CHUNKABLE_KINDS for k in kinds)
 
 
 def get_model(cfg) -> ModelAPI:
@@ -33,6 +55,7 @@ def get_model(cfg) -> ModelAPI:
             decode_step=encdec.decode_step,
             init_cache_specs=encdec.init_cache_specs,
             init_cache=encdec.init_cache,
+            prefill_chunk=None,
         )
     return ModelAPI(
         init_params=transformer.init_params,
@@ -42,4 +65,5 @@ def get_model(cfg) -> ModelAPI:
         decode_step=transformer.decode_step,
         init_cache_specs=transformer.init_cache_specs,
         init_cache=transformer.init_cache,
+        prefill_chunk=transformer.prefill_chunk,
     )

@@ -178,6 +178,77 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# chunked-prefill attention over a partially filled cache
+# ---------------------------------------------------------------------------
+
+def chunk_attention(
+    q: jax.Array,            # (B, S, H, D)   chunk queries
+    k: jax.Array,            # (B, S, KH, D)  chunk keys
+    v: jax.Array,            # (B, S, KH, Dv) chunk values
+    k_past: jax.Array,       # (B, P, KH, D)  resident cache (physical order)
+    v_past: jax.Array,       # (B, P, KH, Dv)
+    q_pos: jax.Array,        # (S,) absolute positions of the chunk tokens
+    k_pos: jax.Array,        # (P,) absolute positions of past keys (<0: hole)
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+) -> jax.Array:
+    """Attention of a prefill chunk against (resident cache ++ chunk) keys.
+
+    The cache may be physically reordered (rolling-window slots) or contain
+    never-written holes; ``k_pos`` carries each physical slot's absolute
+    position (negative = not a real key), so causality and windowing are
+    enforced on absolute positions, exactly as monolithic prefill's mask
+    would.  The chunk's own keys are appended *after* the resident ones so
+    rolling caches whose chunk writes would overwrite still-needed old keys
+    stay attendable (write-back happens after this call).
+    """
+    kk = jnp.concatenate([k_past.astype(jnp.float32),
+                          k.astype(jnp.float32)], axis=1)
+    vv = jnp.concatenate([v_past.astype(jnp.float32),
+                          v.astype(jnp.float32)], axis=1)
+    pos_all = jnp.concatenate([k_pos, q_pos])
+    b, s, h, d = q.shape
+    kh = kk.shape[2]
+    g = h // kh
+    qs = (q.astype(jnp.float32) * d ** -0.5).reshape(b, s, kh, g, d)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qs, kk)
+    if attn_softcap:
+        sc = softcap(sc, attn_softcap)
+    ok = (pos_all[None, :] <= q_pos[:, None]) & (pos_all[None, :] >= 0)
+    if window:
+        ok &= pos_all[None, :] > q_pos[:, None] - window
+    sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vv)
+    return out.reshape(b, s, h, vv.shape[-1])
+
+
+def _rolling_slot_positions(pos, smax: int) -> jax.Array:
+    """Absolute position held by each physical slot of a rolling cache
+    *before* positions >= ``pos`` are written (negative = never written).
+
+    Position p lands at slot p % smax, so slot j holds the largest
+    p < pos with p === j (mod smax)."""
+    slot = jnp.arange(smax)
+    last = pos - 1
+    return last - (last - slot) % smax
+
+
+def _rolling_write(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
+    """Scatter chunk K/V ``new`` (B, S, ...) into a rolling cache at slots
+    (pos + i) % smax; only the last smax tokens survive when S > smax."""
+    smax = cache.shape[1]
+    s = new.shape[1]
+    if s >= smax:
+        idx = (pos + s - smax + jnp.arange(smax)) % smax
+        new = new[:, -smax:]
+    else:
+        idx = (pos + jnp.arange(s)) % smax
+    return cache.at[:, idx].set(new.astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
 # standard GQA attention layer (init / train / prefill+cache / decode)
 # ---------------------------------------------------------------------------
 
@@ -214,8 +285,36 @@ def attn_apply(
     window = cfg.window if kind in ("swa", "local") else 0
     causal = kind != "bidir"
     decode = cache is not None and s == 1
+    chunked = cache is not None and pos is not None and s > 1
 
-    if decode:
+    if chunked:
+        # chunked prefill: s tokens at absolute positions pos..pos+s-1
+        # against a partially filled cache.  Attention runs over (resident
+        # cache ++ chunk) with absolute-position masks; the chunk's K/V is
+        # written back afterwards so rolling windows never read their own
+        # overwrites.
+        q_pos = pos + jnp.arange(s)
+        q, k, v = _qkv(p, x, cfg, q_pos[None, :])
+        smax = cache["k"].shape[1]
+        rolling = bool(window)
+        if rolling:
+            k_pos = _rolling_slot_positions(pos, smax)
+        else:
+            slot = jnp.arange(smax)
+            k_pos = jnp.where(slot < pos, slot, -1)
+        out = chunk_attention(q, k, v, cache["k"], cache["v"], q_pos, k_pos,
+                              window=window,
+                              attn_softcap=cfg.attn_logit_softcap)
+        if rolling:
+            k_cache = _rolling_write(cache["k"], k, pos)
+            v_cache = _rolling_write(cache["v"], v, pos)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+    elif decode:
         positions = jnp.full((b, 1), pos, jnp.int32)
         q, k, v = _qkv(p, x, cfg, positions)
         rolling = bool(window)
@@ -319,8 +418,11 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None):
     h = cfg.num_heads
     r_kv = cfg.kv_lora_rank
     dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
-    decode = cache is not None and s == 1
-    positions = (jnp.full((b, 1), pos, jnp.int32) if decode
+    # the absorbed-latent branch serves both single-token decode (s == 1)
+    # and chunked prefill (s > 1): every einsum already carries the s axis,
+    # only the causal mask needs per-query positions
+    decode = cache is not None and pos is not None
+    positions = (pos + jnp.arange(s)[None, :] if decode
                  else jnp.arange(s)[None, :])
 
     cq = rms_norm(p["q_norm"], x @ p["w_dq"], cfg.norm_eps)
@@ -346,9 +448,10 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None):
                            c_cache.astype(jnp.float32))
         s_pe = jnp.einsum("bshd,bkd->bhsk", q_pe.astype(jnp.float32),
                           pe_cache.astype(jnp.float32))
-        scores = (s_lat + s_pe) * scale
-        valid = jnp.arange(c_cache.shape[1]) <= pos
-        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        scores = (s_lat + s_pe) * scale                # (B, H, s, K)
+        q_pos = pos + jnp.arange(s)
+        valid = jnp.arange(c_cache.shape[1])[None, :] <= q_pos[:, None]
+        scores = jnp.where(valid[None, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhsk,bkr->bshr", probs,
                          c_cache.astype(jnp.float32))     # (B, 1, H, r_kv)

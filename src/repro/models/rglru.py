@@ -55,6 +55,10 @@ def rglru_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None):
     """cache = {"conv": (B, 3, W), "h": (B, W)}."""
     b, s, _ = x.shape
     decode = cache is not None and s == 1
+    if cache is not None and pos is not None and s > 1:
+        raise NotImplementedError(
+            "chunked prefill is not supported for RG-LRU blocks (the "
+            "recurrence cannot resume from a cached state mid-prompt yet)")
 
     gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
     xw = x @ p["w_x"]

@@ -130,6 +130,10 @@ def ssm_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None):
     h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
     p_dim = d_in // h
     decode = cache is not None and s == 1
+    if cache is not None and pos is not None and s > 1:
+        raise NotImplementedError(
+            "chunked prefill is not supported for SSM blocks (the prefill "
+            "scan cannot resume from a cached recurrent state yet)")
 
     z_all = x @ p["in_proj"]
     z, xbc, dt = _split_proj(cfg, z_all)

@@ -316,6 +316,55 @@ def prefill(cfg, params, tokens, cache, *, vision_embeds=None):
     return logits, new_cache
 
 
+def prefill_chunk(cfg, params, cache, tokens, pos):
+    """One prefill chunk: ``tokens`` (B, S) at absolute positions
+    pos..pos+S-1 against a partially filled cache -> (last-position logits
+    (B, 1, V), new cache).
+
+    Splitting a prompt into chunks and feeding them here in order is
+    mathematically identical to one monolithic :func:`prefill` call — the
+    chunk attends to everything already in the cache plus itself, under the
+    same absolute-position causal/window masks — which is what lets the
+    scheduler interleave prompt chunks with decode steps of other slots
+    (token-equivalence locked down in tests/test_paged_prefill.py).
+    Recurrent blocks (ssm / rglru) cannot resume a prompt mid-scan and
+    raise; ``models.api.supports_chunked_prefill`` gates them off.
+    """
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = constrain(x, "batch", None, None)
+    new_cache = {"prefix": [], "suffix": []}
+
+    for kind, p, c in zip(cfg.prefix_kinds, params["prefix"],
+                          cache["prefix"]):
+        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
+        new_cache["prefix"].append(nc)
+
+    if cfg.scan_repeats:
+        def body(x, xs):
+            layer_params, layer_cache = xs
+            ncs = {}
+            for i, kind in enumerate(cfg.scan_pattern):
+                x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
+                                       cache=layer_cache[f"b{i}"], pos=pos)
+                ncs[f"b{i}"] = nc
+            return x, ncs
+
+        x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+        new_cache["scan"] = scan_cache
+    else:
+        new_cache["scan"] = {}
+
+    for kind, p, c in zip(cfg.suffix_kinds, params["suffix"],
+                          cache["suffix"]):
+        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
+        new_cache["suffix"].append(nc)
+
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return _unembed(cfg, params, x), new_cache
+
+
 def decode_step(cfg, params, cache, tokens, pos):
     """One token with a filled cache -> (logits (B,1,V), new cache).
 

@@ -25,17 +25,27 @@ Compression on BNNs"), module by module:
                        cannot flush the hot set the way it flushes LRU.
   scheduler            the evaluation pipeline driver as slot-level
                        continuous batching: a SlotPool of fixed decode
-                       slots, per-slot positions/KV lanes, batch-1
-                       exact-position prefill on admission, one vmapped
-                       decode step for all slots, admit-on-retire (a
-                       finished request is replaced before the next decode
-                       step).  mode="wave" reproduces the old
-                       wave-granular scheduling as a slot config; both
-                       modes are token-identical, only occupancy differs.
+                       slots, per-slot positions/KV lanes, exact-position
+                       prefill on admission (monolithic batch-1 or
+                       fixed-size chunks interleaved with decode under a
+                       token budget), one vmapped decode step for all
+                       slots, admit-on-retire.  KV lanes are optionally
+                       backed by demand-allocated fixed-size pages
+                       (PageAllocator + per-slot page tables) so short
+                       requests stop paying long-request memory and the
+                       pool grows without recompiling decode.
+                       mode="wave" reproduces the old wave-granular
+                       scheduling as a slot config; every scheduling
+                       config is token-identical, only latency and
+                       occupancy differ.
   metrics              the paper's measured quantities as counters:
                        throughput, slot occupancy, decode-cache hit rate,
-                       HBM bytes streamed vs avoided.
+                       HBM bytes streamed vs avoided, prefill-chunk
+                       latency / decode stall, KV-page occupancy.
   ===================  ====================================================
+
+The module <-> paper-structure mapping, with the request lifecycle
+diagram, is documented in docs/ARCHITECTURE.md.
 
 The fused Pallas path (``kernels.fused_decode_contraction``) remains the
 in-kernel decoder (decode-on-the-fly, nothing cached); the runtime adds the
@@ -47,8 +57,8 @@ from repro.runtime.decode_cache import (DecodeTileCache, EvictionPolicy,
                                         FrequencyWeightedPolicy, LFUPolicy,
                                         LRUPolicy, make_policy)
 from repro.runtime.metrics import ServeMetrics
-from repro.runtime.scheduler import (Request, Scheduler, ServeEngine, Slot,
-                                     SlotPool)
+from repro.runtime.scheduler import (PageAllocator, Request, Scheduler,
+                                     ServeEngine, Slot, SlotPool)
 from repro.runtime.weight_store import StoredLayer, WeightStore
 
 __all__ = [
@@ -57,6 +67,7 @@ __all__ = [
     "FrequencyWeightedPolicy",
     "LFUPolicy",
     "LRUPolicy",
+    "PageAllocator",
     "Request",
     "Scheduler",
     "ServeEngine",

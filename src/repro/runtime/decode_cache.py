@@ -33,6 +33,34 @@ Accounting:
     replaces it exactly (old ``nbytes`` released before the new are
     charged), so ``resident_bytes`` always equals the sum over live
     entries — tests/test_runtime.py locks this down.
+
+Knobs, in one place:
+
+  =====================  ===================================================
+  knob                   effect
+  =====================  ===================================================
+  ``capacity_bytes``     ``None`` = unbounded (everything cached after its
+                         first decode); ``0`` = caching disabled, the
+                         paper's no-cache baseline; otherwise a hard bound
+                         on resident decoded bytes.  Values larger than
+                         capacity are never cached at all.
+  ``policy``             ``"lru"`` | ``"lfu"`` | ``"freq"`` or any
+                         ``EvictionPolicy`` instance; ``None`` = LRU.
+  ``FrequencyWeighted-``
+  ``Policy(prior_-``     weight of the static §III-A occurrence prior
+  ``weight=0.8, ...)``   relative to one fresh access.  < 1 keeps live
+                         history dominant (a just-touched tile always
+                         outranks an idle pinned one — pinning can never
+                         starve the working set); >= 1 lets the prior
+                         dominate, appropriate when access recency carries
+                         no signal (pure cyclic scans; the example drives
+                         this with ``prior_weight=4``).
+  ``... half_life=64``   access-count decay, in policy events (inserts +
+                         hits).  Small = closer to LRU (history fades
+                         fast); large = closer to pure frequency ranking.
+                         ``1e6``-scale values effectively freeze counts so
+                         the static prior decides victims.
+  =====================  ===================================================
 """
 
 from __future__ import annotations

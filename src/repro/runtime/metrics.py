@@ -14,6 +14,15 @@ pairs and ``capacity_steps`` counts (decode step x slot) pairs, so
 request — the quantity slot-level continuous batching raises over
 wave-granular scheduling (waves idle finished lanes until the wave
 drains).
+
+Chunked-prefill accounting: ``prefill_chunks`` / ``prefill_chunk_tokens``
+count the chunks pushed through ``prefill_chunk`` and
+``decode_stall_s`` accumulates chunk time spent while active slots had
+decode work waiting — the latency cost that the per-iteration prefill
+token budget bounds.  Page accounting (paged KV pools only):
+``pages_in_use`` / ``pages_total`` are last-step gauges and
+``page_occupancy()`` is the mean pool fraction holding live request
+state — the memory short requests stop paying under paged lanes.
 """
 
 from __future__ import annotations
@@ -42,6 +51,13 @@ class ServeMetrics:
     waves: int = 0             # admission rounds (wave mode only)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    prefill_chunks: int = 0            # chunked-prefill chunk count
+    prefill_chunk_tokens: int = 0      # prompt tokens pushed through chunks
+    decode_stall_s: float = 0.0        # chunk time while decoders waited
+    pages_in_use: int = 0              # KV page gauges (paged pools only;
+    pages_total: int = 0               # last observed decode step)
+    page_use_steps: int = 0            # sum over steps of pages_in_use
+    page_capacity_steps: int = 0       # sum over steps of pages_total
     _t0: float = dataclasses.field(default_factory=time.monotonic)
 
     # -- recording ---------------------------------------------------------
@@ -57,6 +73,24 @@ class ServeMetrics:
     def record_wave(self) -> None:
         """One drain-then-admit round (wave-mode scheduling only)."""
         self.waves += 1
+
+    def record_prefill_chunk(self, n_tokens: int, dt: float,
+                             stalled: bool = False) -> None:
+        """One prompt chunk through ``prefill_chunk``; ``stalled`` marks
+        chunks that ran while other slots had decode work waiting (their
+        time is the decode-latency cost chunking is bounding)."""
+        self.prefill_chunks += 1
+        self.prefill_chunk_tokens += n_tokens
+        self.prefill_s += dt
+        if stalled:
+            self.decode_stall_s += dt
+
+    def record_pages(self, in_use: int, total: int) -> None:
+        """KV page-pool gauge after a decode step (paged pools only)."""
+        self.pages_in_use = in_use
+        self.pages_total = total
+        self.page_use_steps += in_use
+        self.page_capacity_steps += total
 
     def record_decode_step(self, n_tokens: int, dt: float,
                            n_slots: int = 0) -> None:
@@ -85,6 +119,17 @@ class ServeMetrics:
         return self.slot_steps / self.capacity_steps \
             if self.capacity_steps else 0.0
 
+    def page_occupancy(self) -> float:
+        """Mean fraction of the KV page pool holding live request state
+        (the memory short requests stop paying under paged lanes)."""
+        return self.page_use_steps / self.page_capacity_steps \
+            if self.page_capacity_steps else 0.0
+
+    def prefill_chunk_ms(self) -> float:
+        """Mean milliseconds per prefill chunk (chunked prefill only)."""
+        return self.prefill_s / self.prefill_chunks * 1000.0 \
+            if self.prefill_chunks else 0.0
+
     def stats_line(self, cache=None) -> str:
         parts = [
             f"tokens {self.tokens_generated}",
@@ -94,6 +139,13 @@ class ServeMetrics:
         ]
         if self.capacity_steps:
             parts.append(f"occupancy {self.occupancy() * 100:.0f}%")
+        if self.prefill_chunks:
+            parts.append(f"chunks {self.prefill_chunks} "
+                         f"({self.prefill_chunk_ms():.1f} ms, "
+                         f"stall {self.decode_stall_s:.2f}s)")
+        if self.pages_total:
+            parts.append(f"pages {self.pages_in_use}/{self.pages_total} "
+                         f"({self.page_occupancy() * 100:.0f}% mean)")
         if cache is not None:
             parts.append(f"cache hit-rate {cache.hit_rate() * 100:.1f}%")
             parts.append(f"streamed {_fmt_bytes(cache.bytes_streamed)}, "

@@ -1,4 +1,4 @@
-"""Slot-level continuous batching: SlotPool + scheduler + serving engine.
+"""Slot-level continuous batching: SlotPool + paged KV + chunked prefill.
 
 The serving core is a **SlotPool** — a fixed set of decode slots, each one
 batch lane of a pooled per-slot KV cache.  Every per-request quantity the
@@ -7,7 +7,13 @@ old wave loop shared across a batch is per-slot state here:
   admit    — a queued request takes any free slot: its prompt is prefilled
              alone (batch-1, exact length, exact positions — no pad tokens
              visible to attention, no RoPE shift) and the filled cache is
-             scattered into the slot's lane;
+             scattered into the slot's lane.  With ``prefill_chunk`` set,
+             the prompt is split into fixed-size chunks interleaved with
+             decode steps of the other slots (a token budget per scheduler
+             iteration bounds the decode-latency impact) — token-identical
+             to monolithic prefill because each chunk attends to the
+             already-prefilled cache under the same absolute-position
+             masks;
   decode   — ONE jit(vmap(decode_step)) advances every slot with its own
              position; slots at different depths of different requests
              share each step's weight-tile fetch, so decoded-tile reuse is
@@ -17,12 +23,40 @@ old wave loop shared across a batch is per-slot state here:
              and is refilled from the queue *before the next decode step*
              (admit-on-retire), so finished requests never idle a lane.
 
-``mode="wave"`` reproduces the old wave-granular scheduling as a slot
-configuration: admission only happens when the pool has fully drained, so
-slots retire in place and freed lanes idle until the wave ends.  Both
-modes run the same per-slot decode, which is what makes them produce
-token-identical results (the scheduler equivalence test) — scheduling
-policy changes throughput, never content.
+With ``kv_page_size`` set, the length-scaling KV lanes are backed by a
+pool of fixed-size pages handed out by a :class:`PageAllocator` instead of
+one monolithic ``(n_slots, 1, slot_len, ...)`` buffer: a slot owns only
+the pages its positions have reached, short requests stop paying for
+long-request memory, and the page pool can grow (``SlotPool.grow_pages``)
+without recompiling the vmapped decode step — only the cheap page
+gather/scatter re-traces.  ``kv_page_size=None`` keeps the PR-2 monolithic
+lanes (donated in-place decode, zero gather traffic); one page = whole
+lane reproduces the same tokens through the paged machinery (equivalence
+locked down in tests/test_paged_prefill.py).
+
+Scheduler-state invariants (enforced by construction, asserted in tests):
+
+  * slot lifecycle   — FREE (req is None) -> PREFILLING (req set,
+    ``prefilling``; chunk cursor advances on a standalone batch-1 cache
+    outside the pool) -> ACTIVE (cache installed in the lane/pages, decode
+    advances ``pos``) -> FREE (retire releases pages + reservations).
+    Admission overwrites the whole lane, so a free lane's stale state can
+    never leak into a new request.
+  * page ownership   — a physical page is referenced by at most one slot's
+    table row; page 0 is the shared dummy sink that absorbs writes from
+    free lanes (which keep decoding for fixed shapes, output discarded)
+    and is never read as a valid position (attention masks by absolute
+    position, and every position < a slot's cursor has a real page).
+  * no mid-flight OOM — admission reserves every page the request can ever
+    need (ceil(cache_len / page_size)); on-demand allocation during decode
+    draws from that reservation, so it cannot fail; retire returns unused
+    reservations.
+  * ``mode="wave"``   — reproduces the old wave-granular scheduling as a
+    slot configuration: admission only happens when the pool has fully
+    drained, so slots retire in place and freed lanes idle until the wave
+    ends.  Both modes run the same per-slot decode, which is what makes
+    them token-identical (the scheduler equivalence test) — scheduling
+    policy changes throughput, never content.
 
 Every decode step asks the WeightStore to materialise the serving params:
 on step 1 the tiles stream+decode (cache misses); from step 2 on they are
@@ -39,7 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import get_model
+from repro.models.api import get_model, supports_chunked_prefill
 from repro.runtime import weight_store as ws_mod
 from repro.runtime.decode_cache import DecodeTileCache, EvictionPolicy
 from repro.runtime.metrics import ServeMetrics
@@ -47,6 +81,7 @@ from repro.runtime.weight_store import WeightStore
 
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
 SLOT_LEN_QUANTUM = 16      # slot cache lengths round up to this many tokens
+DUMMY_PAGE = 0             # physical page that absorbs idle-lane writes
 
 
 @dataclasses.dataclass
@@ -56,10 +91,84 @@ class Request:
     max_new_tokens: int
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0                 # monotonic submission time
+    t_first: float | None = None          # monotonic first-token time
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    def first_token_latency(self) -> float | None:
+        """Seconds from submission to the first generated token."""
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+
+class PageAllocator:
+    """Free-list allocator over a fixed set of physical KV page ids, with
+    admission-time reservations.
+
+    ``reserve(n)`` earmarks capacity without picking pages (called once per
+    admitted request with its worst-case page count); ``alloc`` hands out a
+    concrete page against an existing reservation, so on-demand allocation
+    during decode can never fail mid-request.  Invariants (see
+    tests/test_paged_prefill.py): every id is free xor allocated, a page is
+    never handed out twice without an intervening ``release``, and
+    ``reserved <= len(free)`` at all times.
+    """
+
+    def __init__(self, page_ids):
+        ids = list(page_ids)
+        self.total = len(ids)
+        self._free = sorted(ids, reverse=True)    # pop() -> ascending ids
+        self._allocated: set[int] = set()
+        self.reserved = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return len(self._allocated)
+
+    def available(self) -> int:
+        """Pages free and not spoken for by a reservation."""
+        return len(self._free) - self.reserved
+
+    def reserve(self, n: int) -> bool:
+        """Earmark ``n`` future allocations; False if they could not all be
+        satisfied (the caller should defer admission, not retry-loop)."""
+        if n > self.available():
+            return False
+        self.reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        assert 0 <= n <= self.reserved, (n, self.reserved)
+        self.reserved -= n
+
+    def alloc(self) -> int:
+        """One page against an existing reservation."""
+        assert self.reserved > 0, "alloc without reservation"
+        assert self._free, "reservation invariant broken: no free pages"
+        self.reserved -= 1
+        pid = self._free.pop()
+        self._allocated.add(pid)
+        return pid
+
+    def release(self, page_ids) -> None:
+        for pid in page_ids:
+            assert pid in self._allocated, f"double free of page {pid}"
+            self._allocated.remove(pid)
+            self._free.append(pid)
+
+    def add_pages(self, page_ids) -> None:
+        """Grow the pool (``SlotPool.grow_pages``)."""
+        ids = list(page_ids)
+        assert not (set(ids) & self._allocated) and \
+            not (set(ids) & set(self._free))
+        self.total += len(ids)
+        self._free.extend(sorted(ids, reverse=True))
 
 
 class ServeEngine:
@@ -110,6 +219,19 @@ class ServeEngine:
             donate_argnums=(1,))
         self._decode_jit = jax.jit(
             lambda p, c, t, q: self.api.decode_step(self.cfg, p, c, t, q))
+        # chunked prefill: batch-1, one compile per distinct chunk length
+        # (fixed-size chunks + one remainder size keep that bounded)
+        self._chunk_jit = None
+        if self.api.prefill_chunk is not None:
+            self._chunk_jit = jax.jit(
+                lambda p, c, t, q: self.api.prefill_chunk(self.cfg, p, c,
+                                                          t, q),
+                donate_argnums=(1,))
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return self._chunk_jit is not None and \
+            supports_chunked_prefill(self.cfg)
 
     def step_params(self):
         """Per-step serving params (tile-cache-served when compressed)."""
@@ -156,6 +278,18 @@ class ServeEngine:
                 "model numerics are broken)")
         return int(jnp.argmax(logits[0, -1])), cache
 
+    def fresh_slot_cache(self, slot_len: int):
+        """Zeroed batch-1 cache for an in-flight chunked prefill."""
+        return self.api.init_cache(self.cfg, 1, slot_len)
+
+    def prefill_chunk_step(self, params, cache, chunk: np.ndarray,
+                           pos: int):
+        """One prompt chunk at absolute positions pos..pos+len-1 ->
+        (last-position logits, updated cache).  The cache argument is
+        donated."""
+        toks = jnp.asarray(np.asarray(chunk, np.int32)[None])
+        return self._chunk_jit(params, cache, toks, jnp.int32(pos))
+
     def slot_decode(self, params, pooled_cache, toks, poss):
         """One decode step for every slot: toks (S, 1, 1) int32, poss (S,)
         int32 -> (logits (S, 1, 1, V), new pooled cache)."""
@@ -177,66 +311,264 @@ class Slot:
 
     ``tok`` is the most recently generated token (already appended to the
     request) and the next decode input; ``pos`` is its absolute position.
+    While ``prefilling``, the slot owns the request but not yet a lane:
+    ``prefill_cursor`` counts prompt tokens already pushed through
+    ``prefill_chunk`` into ``pcache`` (a standalone batch-1 cache that is
+    installed into the pool when the last chunk lands).  ``reserved_left``
+    is the slot's outstanding page reservation (paged pools only).
     """
 
     index: int
     req: Request | None = None
     pos: int = 0
     tok: int = 0
+    prefilling: bool = False
+    prefill_cursor: int = 0
+    pcache: object = None
+    reserved_left: int = 0
 
 
 class SlotPool:
     """Fixed decode slots over one pooled per-slot KV cache.
 
-    The pooled cache holds each slot's cache as batch lane ``index``
-    (leaves ``(n_slots, 1, ...)``); admission scatters a freshly prefilled
-    batch-1 cache into the lane, decode advances all lanes with per-slot
-    positions via the engine's vmapped step.  Free lanes keep decoding
-    (fixed shapes — same cost as the old full-wave step) but their output
-    is discarded and their state never leaks: admission overwrites the
-    whole lane.
+    ``page_size=None`` (default): the PR-2 monolithic layout — each slot's
+    cache is batch lane ``index`` of one pooled buffer (leaves
+    ``(n_slots, 1, slot_len, ...)``), donated into the vmapped decode so
+    the KV update happens in place.
+
+    ``page_size=N``: length-scaling cache leaves are re-backed by a pool
+    of fixed-size pages (leaves ``(n_pages, page_size, ...)``) plus a
+    per-slot page table; decode gathers each lane's pages into the same
+    contiguous view the monolithic path uses (so the compiled decode step
+    is identical), and scatters the updated pages back.  Pages are
+    allocated on demand as a slot's position crosses page boundaries and
+    released at retire; leaves whose length does not scale with
+    ``slot_len`` (rolling-window KV, recurrent states, cross-attention)
+    stay per-slot lanes.  Page 0 is a shared dummy sink: unallocated table
+    entries point at it, free lanes write into it, and attention's
+    absolute-position masks guarantee it is never read as a valid key.
+
+    Free lanes keep decoding (fixed shapes — same cost as the old
+    full-wave step) but their output is discarded and their state never
+    leaks: admission overwrites the whole lane.
     """
 
-    def __init__(self, engine: ServeEngine, n_slots: int, slot_len: int):
+    def __init__(self, engine: ServeEngine, n_slots: int, slot_len: int,
+                 *, page_size: int | None = None,
+                 n_pages: int | None = None):
         self.engine = engine
         self.n_slots = n_slots
+        self.page_size = page_size
+        self.paged = page_size is not None
+        if self.paged:
+            if page_size <= 0:
+                raise ValueError(f"page_size must be positive: {page_size}")
+            slot_len = -(-slot_len // page_size) * page_size
         self.slot_len = slot_len
+        self.pages_per_slot = (slot_len // page_size) if self.paged else 0
         self.slots = [Slot(i) for i in range(n_slots)]
         specs = engine.api.init_cache_specs(engine.cfg, 1, slot_len)
-        self.cache = jax.tree_util.tree_map(
-            lambda s: jnp.zeros((n_slots, *s.shape), s.dtype), specs)
-        self._scatter = jax.jit(
-            lambda pool, new, i: jax.tree_util.tree_map(
-                lambda p, n: p.at[i].set(n.astype(p.dtype)), pool, new),
-            donate_argnums=(0,))
+        if not self.paged:
+            self.cache = jax.tree_util.tree_map(
+                lambda s: jnp.zeros((n_slots, *s.shape), s.dtype), specs)
+            self._scatter = jax.jit(
+                lambda pool, new, i: jax.tree_util.tree_map(
+                    lambda p, n: p.at[i].set(n.astype(p.dtype)), pool, new),
+                donate_argnums=(0,))
+            return
+        # -- paged layout ---------------------------------------------------
+        # A leaf is paged iff its shape scales 1:1 with slot_len (full-length
+        # KV); rolling-window, recurrent-state, and encoder-length leaves
+        # keep per-slot lanes.  Classification probes the spec factory at
+        # two lengths instead of guessing from shapes; the length axis is
+        # wherever the shapes diverge (scan-stacked leaves carry a leading
+        # repeats dim, e.g. (R, 1, L, KH, HD)), and one physical page holds
+        # ``page_size`` token positions *across* the leading dims (a
+        # cross-layer slab).
+        leaves_a, self._treedef = jax.tree_util.tree_flatten(specs)
+        leaves_b = jax.tree_util.tree_flatten(
+            engine.api.init_cache_specs(engine.cfg, 1, 2 * slot_len))[0]
+        self._paged_axis: list[int | None] = []
+        for sa, sb in zip(leaves_a, leaves_b):
+            if sa.shape == sb.shape:
+                self._paged_axis.append(None)
+                continue
+            diff = [i for i, (a, b) in enumerate(zip(sa.shape, sb.shape))
+                    if a != b]
+            assert len(sa.shape) == len(sb.shape) and diff == [diff[0]] and \
+                sa.shape[diff[0]] == slot_len and \
+                sb.shape[diff[0]] == 2 * slot_len, (sa.shape, sb.shape)
+            self._paged_axis.append(diff[0])
+        if n_pages is None:
+            n_pages = n_slots * self.pages_per_slot + 1   # +1: dummy sink
+        if n_pages < self.pages_per_slot + 1:
+            raise ValueError(
+                f"n_pages {n_pages} cannot back even one full slot "
+                f"({self.pages_per_slot} pages + dummy)")
+        self.n_pages = n_pages
+        self.allocator = PageAllocator(range(1, n_pages))   # 0 = dummy
+        self.table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self.pages = [
+            jnp.zeros((n_pages, *sa.shape[:ax], page_size,
+                       *sa.shape[ax + 1:]), sa.dtype)
+            for sa, ax in zip(leaves_a, self._paged_axis) if ax is not None]
+        self.unpaged = [
+            jnp.zeros((n_slots, *sa.shape), sa.dtype)
+            for sa, ax in zip(leaves_a, self._paged_axis) if ax is None]
+        self._build_page_jits()
 
+    def _build_page_jits(self) -> None:
+        axes = self._paged_axis
+        pps, page, view = self.pages_per_slot, self.page_size, self.slot_len
+
+        # A paged pool leaf is (n_pages, *lead, page, *rest) where the lane
+        # leaf is (*lead, view, *rest) with view at axis ``ax``
+        # (lead = leaf.shape[:ax]).  Gather pulls P pages per slot and
+        # splices the page axis back into position ax; scatter inverts it.
+        def gather(pages, unpaged, table):
+            views, pi, ui = [], 0, 0
+            for ax in axes:
+                if ax is not None:
+                    pool = pages[pi]
+                    pi += 1
+                    v = pool[table]             # (S, P, *lead, page, *rest)
+                    v = jnp.moveaxis(v, 1, 1 + ax)   # (S, *lead, P, page, ..)
+                    views.append(v.reshape(*v.shape[:1 + ax], view,
+                                           *v.shape[3 + ax:]))
+                else:
+                    views.append(unpaged[ui])
+                    ui += 1
+            return jax.tree_util.tree_unflatten(self._treedef, views)
+
+        def scatter(pages, new_tree, table):
+            leaves = jax.tree_util.tree_flatten(new_tree)[0]
+            out_pages, out_unpaged, pi = [], [], 0
+            for leaf, ax in zip(leaves, axes):
+                if ax is not None:
+                    pool = pages[pi]
+                    pi += 1
+                    v = leaf.reshape(*leaf.shape[:1 + ax], pps, page,
+                                     *leaf.shape[2 + ax:])
+                    v = jnp.moveaxis(v, 1 + ax, 1)  # (S, P, *lead, page, ..)
+                    out_pages.append(pool.at[table].set(v.astype(pool.dtype)))
+                else:
+                    out_unpaged.append(leaf)
+            return out_pages, out_unpaged
+
+        def lane_scatter(pages, unpaged, lane, row, i):
+            leaves = jax.tree_util.tree_flatten(lane)[0]
+            out_pages, out_unpaged, pi, ui = [], [], 0, 0
+            for leaf, ax in zip(leaves, axes):
+                if ax is not None:
+                    pool = pages[pi]
+                    pi += 1
+                    v = leaf.reshape(*leaf.shape[:ax], pps, page,
+                                     *leaf.shape[1 + ax:])
+                    v = jnp.moveaxis(v, ax, 0)  # (P, *lead, page, *rest)
+                    out_pages.append(pool.at[row].set(v.astype(pool.dtype)))
+                else:
+                    pool = unpaged[ui]
+                    ui += 1
+                    out_unpaged.append(pool.at[i].set(leaf.astype(pool.dtype)))
+            return out_pages, out_unpaged
+
+        # growing n_pages re-traces only these (decode compiles are keyed on
+        # the gathered view, whose shape is n_pages-independent)
+        self._gather = jax.jit(gather)
+        self._scatter_pages = jax.jit(scatter, donate_argnums=(0,))
+        self._lane_scatter = jax.jit(lane_scatter, donate_argnums=(0, 1))
+
+    # -- page bookkeeping ---------------------------------------------------
+    def pages_needed(self, cache_len: int) -> int:
+        return -(-cache_len // self.page_size) if self.paged else 0
+
+    def pages_in_use(self) -> int:
+        return self.allocator.n_allocated if self.paged else 0
+
+    def _ensure_pages(self, slot: Slot, upto_pos: int) -> None:
+        """Allocate table entries so positions [0, upto_pos] are backed."""
+        need = upto_pos // self.page_size + 1
+        assert need <= self.pages_per_slot, (need, self.pages_per_slot)
+        for j in range(need):
+            if self.table[slot.index, j] == DUMMY_PAGE:
+                self.table[slot.index, j] = self.allocator.alloc()
+                slot.reserved_left -= 1
+                assert slot.reserved_left >= 0
+
+    def grow_pages(self, n_pages: int) -> None:
+        """Grow the physical page pool to ``n_pages`` without touching the
+        compiled decode step (only the gather/scatter jits re-trace)."""
+        assert self.paged, "grow_pages on a monolithic pool"
+        if n_pages <= self.n_pages:
+            return
+        extra = n_pages - self.n_pages
+        self.pages = [
+            jnp.concatenate(
+                [p, jnp.zeros((extra, *p.shape[1:]), p.dtype)])
+            for p in self.pages]
+        self.allocator.add_pages(range(self.n_pages, n_pages))
+        self.n_pages = n_pages
+        self._build_page_jits()
+
+    # -- slot queries ---------------------------------------------------
     def free(self) -> list[Slot]:
         return [s for s in self.slots if s.req is None]
 
     def active(self) -> list[Slot]:
-        return [s for s in self.slots if s.req is not None]
+        return [s for s in self.slots if s.req is not None
+                and not s.prefilling]
 
-    def admit(self, req: Request, params) -> tuple[Slot, int]:
-        """Prefill ``req`` into a free slot -> (slot, first token)."""
-        slot = self.free()[0]
-        if self.engine.cache_len(req.prompt_len, req.max_new_tokens) \
-                > self.slot_len:
-            raise ValueError(
-                f"request {req.rid} needs "
-                f"{self.engine.cache_len(req.prompt_len, req.max_new_tokens)}"
-                f" cache positions > slot_len {self.slot_len}")
-        tok, cache1 = self.engine.prefill_request(params, req.prompt,
-                                                  self.slot_len)
-        self.cache = self._scatter(self.cache, cache1,
-                                   jnp.int32(slot.index))
-        slot.req = req
+    def prefilling(self) -> list[Slot]:
+        return [s for s in self.slots if s.prefilling]
+
+    def busy(self) -> bool:
+        return any(s.req is not None for s in self.slots)
+
+    # -- lane install / retire ---------------------------------------------
+    def reserve_for(self, slot: Slot, req: Request) -> bool:
+        """Reserve every page ``req`` can need; False -> defer admission."""
+        if not self.paged:
+            return True
+        need = self.pages_needed(
+            self.engine.cache_len(req.prompt_len, req.max_new_tokens))
+        if not self.allocator.reserve(need):
+            return False
+        slot.reserved_left = need
+        return True
+
+    def install(self, slot: Slot, cache1, tok: int) -> None:
+        """Write a freshly prefilled batch-1 cache into the slot's lane and
+        flip it to ACTIVE with first token ``tok``."""
+        req = slot.req
+        end = self.engine.pos_offset(req.prompt_len)   # positions < end used
+        if self.paged:
+            self._ensure_pages(slot, max(end - 1, 0))
+            row = jnp.asarray(self.table[slot.index])
+            self.pages, self.unpaged = self._lane_scatter(
+                self.pages, self.unpaged, cache1, row,
+                jnp.int32(slot.index))
+        else:
+            self.cache = self._scatter(self.cache, cache1,
+                                       jnp.int32(slot.index))
+        slot.prefilling = False
+        slot.pcache = None
         slot.tok = tok
-        slot.pos = self.engine.pos_offset(req.prompt_len)
-        return slot, tok
+        slot.pos = end
 
     def retire(self, slot: Slot) -> None:
+        """Release the slot's lane, pages, and outstanding reservations."""
+        if self.paged:
+            row = self.table[slot.index]
+            self.allocator.release(int(p) for p in row if p != DUMMY_PAGE)
+            row[:] = DUMMY_PAGE
+            if slot.reserved_left:
+                self.allocator.unreserve(slot.reserved_left)
+        slot.reserved_left = 0
+        slot.prefilling = False
+        slot.pcache = None
         slot.req = None
 
+    # -- decode -------------------------------------------------------------
     def decode(self, params) -> list[tuple[Slot, int, bool]]:
         """One vmapped decode step -> per active slot (slot, next token,
         logits_finite); advances each active slot's (tok, pos)."""
@@ -246,8 +578,18 @@ class SlotPool:
         for s in active:
             toks[s.index, 0, 0] = s.tok
             poss[s.index] = s.pos
-        logits, self.cache = self.engine.slot_decode(
-            params, self.cache, jnp.asarray(toks), jnp.asarray(poss))
+            if self.paged:
+                self._ensure_pages(s, s.pos)   # page for this step's write
+        if self.paged:
+            table = jnp.asarray(self.table)
+            views = self._gather(self.pages, self.unpaged, table)
+            logits, new_tree = self.engine.slot_decode(
+                params, views, jnp.asarray(toks), jnp.asarray(poss))
+            self.pages, self.unpaged = self._scatter_pages(
+                self.pages, new_tree, table)
+        else:
+            logits, self.cache = self.engine.slot_decode(
+                params, self.cache, jnp.asarray(toks), jnp.asarray(poss))
         last = logits[:, 0, -1]                           # (S, V)
         nxt = np.asarray(jnp.argmax(last, axis=-1)).astype(np.int32)
         finite = np.asarray(jnp.isfinite(last).all(axis=-1))
@@ -260,7 +602,8 @@ class SlotPool:
 
 
 class Scheduler:
-    """Admit -> per-slot prefill -> vmapped continuous decode.
+    """Admit -> (chunked or monolithic) per-slot prefill -> vmapped
+    continuous decode.
 
     ``mode="continuous"`` (default): admit-on-retire — any freed slot is
     refilled from the queue before the next decode step.
@@ -268,24 +611,46 @@ class Scheduler:
     admission waits until every slot has drained, and each admission round
     takes up to ``batch_size`` queued requests sharing the head request's
     length bucket (the old grouping).
+
+    ``prefill_chunk=N`` splits each admitted prompt into N-token chunks
+    interleaved with decode steps; ``prefill_budget`` caps prefill tokens
+    per scheduler iteration (default: one chunk).  ``kv_page_size=N``
+    backs the KV lanes with N-token pages (``kv_pages`` overrides the
+    physical pool size; default fully backs every slot).
     """
 
     def __init__(self, engine: ServeEngine, *, batch_size: int = 4,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  mode: str = "continuous", slot_len: int | None = None,
+                 prefill_chunk: int | None = None,
+                 prefill_budget: int | None = None,
+                 kv_page_size: int | None = None,
+                 kv_pages: int | None = None,
                  log_every: int = 0, emit: Callable[[str], None] = print):
         if mode not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduling mode {mode!r}")
+        if prefill_chunk is not None and prefill_chunk <= 0:
+            raise ValueError(f"prefill_chunk must be positive: "
+                             f"{prefill_chunk}")
         self.engine = engine
         self.batch_size = batch_size
         self.buckets = tuple(sorted(buckets))
         self.mode = mode
         self.slot_len = slot_len
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget or prefill_chunk
+        self.kv_page_size = kv_page_size
+        self.kv_pages = kv_pages
         self.log_every = log_every
         self.emit = emit
         self._queue: list[Request] = []
         self._pool: SlotPool | None = None
         self._next_rid = 0
+        if prefill_chunk is not None and \
+                not engine.supports_chunked_prefill:
+            self.prefill_chunk = None
+            emit(f"note: {engine.cfg.family} arch cannot resume a prompt "
+                 "mid-cache; falling back to monolithic prefill")
 
     # -- admission ---------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int) -> Request:
@@ -295,7 +660,8 @@ class Scheduler:
                 f"prompt length {prompt.shape[0]} exceeds the largest "
                 f"length bucket ({self.buckets[-1]}); truncate the prompt "
                 f"or configure larger buckets")
-        req = Request(self._next_rid, prompt, int(max_new_tokens))
+        req = Request(self._next_rid, prompt, int(max_new_tokens),
+                      t_submit=time.monotonic())
         self._next_rid += 1
         self._queue.append(req)
         return req
@@ -331,7 +697,9 @@ class Scheduler:
                 self._pool.n_slots != self.batch_size:
             slot_len = max(slot_len, self._pool.slot_len if self._pool
                            else 0)
-            self._pool = SlotPool(eng, self.batch_size, slot_len)
+            self._pool = SlotPool(eng, self.batch_size, slot_len,
+                                  page_size=self.kv_page_size,
+                                  n_pages=self.kv_pages)
         return self._pool
 
     # -- serving -----------------------------------------------------------
@@ -341,16 +709,57 @@ class Scheduler:
             return []
         completed: list[Request] = []
         pool = self._ensure_pool()
-        while self._queue or pool.active():
+        while self._queue or pool.busy():
             self._admit(pool, completed)
+            self._prefill_tick(pool, completed)
             if pool.active():
                 self._step(pool, completed)
         return completed
 
+    def _record_first_token(self, req: Request, tok: int) -> None:
+        req.generated.append(tok)
+        req.t_first = time.monotonic()
+
+    def _start_or_admit(self, pool: SlotPool, req: Request, params,
+                        completed: list[Request]) -> None:
+        """Place ``req`` in a free slot: chunked -> PREFILLING state,
+        monolithic -> full prefill now (the PR-2 admission path)."""
+        m = self.engine.metrics
+        slot = pool.free()[0]
+        if self.engine.cache_len(req.prompt_len, req.max_new_tokens) \
+                > pool.slot_len:
+            raise ValueError(
+                f"request {req.rid} needs "
+                f"{self.engine.cache_len(req.prompt_len, req.max_new_tokens)}"
+                f" cache positions > slot_len {pool.slot_len}")
+        if self.prefill_chunk is not None:
+            slot.req = req
+            slot.prefilling = True
+            slot.prefill_cursor = 0
+            slot.pcache = self.engine.fresh_slot_cache(pool.slot_len)
+            return
+        t0 = time.monotonic()
+        slot.req = req
+        tok, cache1 = self.engine.prefill_request(params, req.prompt,
+                                                  pool.slot_len)
+        pool.install(slot, cache1, tok)
+        self._record_first_token(req, tok)
+        m.record_admit(1, time.monotonic() - t0, tokens=1)
+        self._maybe_finish(pool, slot, completed)
+
+    def _maybe_finish(self, pool: SlotPool, slot: Slot,
+                      completed: list[Request]) -> None:
+        req = slot.req
+        if len(req.generated) >= req.max_new_tokens:
+            req.done = True
+            pool.retire(slot)
+            completed.append(req)
+            self.engine.metrics.record_completed(1)
+
     def _admit(self, pool: SlotPool, completed: list[Request]) -> None:
         m = self.engine.metrics
         if self.mode == "wave":
-            if pool.active() or not self._queue:
+            if pool.busy() or not self._queue:
                 return                    # wave mode: drain before admitting
             group = self._wave_group()[: pool.n_slots]
             m.record_wave()
@@ -360,21 +769,72 @@ class Scheduler:
             if group is not None:
                 if not group:
                     return
-                req = group.pop(0)
+                req = group[0]
             else:
                 if not pool.free():
                     return
-                req = self._queue.pop(0)
-            t0 = time.monotonic()
+                req = self._queue[0]
+            slot = pool.free()[0] if pool.free() else None
+            if slot is None or not pool.reserve_for(slot, req):
+                if slot is not None and not pool.busy():
+                    # idle pool that still can't reserve: no retire will
+                    # ever free pages, so deferring would spin forever
+                    need = pool.pages_needed(self.engine.cache_len(
+                        req.prompt_len, req.max_new_tokens))
+                    raise ValueError(
+                        f"request {req.rid} needs {need} KV pages but "
+                        f"the pool only has {pool.allocator.total}; "
+                        f"raise kv_pages")
+                # paged pool under pressure: keep FIFO order, admit when
+                # a retire returns pages (reservation makes this safe)
+                if group is not None:
+                    self._queue = group + self._queue
+                return
+            (group or self._queue).pop(0)
             params = self.engine.step_params()
-            slot, tok = pool.admit(req, params)
-            req.generated.append(tok)
-            m.record_admit(1, time.monotonic() - t0, tokens=1)
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                pool.retire(slot)
-                completed.append(req)
-                m.record_completed(1)
+            self._start_or_admit(pool, req, params, completed)
+
+    def _prefill_tick(self, pool: SlotPool, completed: list[Request]) -> None:
+        """Advance chunked prefills by up to ``prefill_budget`` prompt
+        tokens (whole chunks; at least one per tick for progress).
+
+        Chunks round-robin across prefilling slots so a short prompt
+        admitted next to a long one reaches its first token after its own
+        few chunks instead of queueing behind the long prompt's."""
+        if self.prefill_chunk is None:
+            return
+        m = self.engine.metrics
+        budget = self.prefill_budget
+        spent = 0
+        pending = pool.prefilling()
+        while pending and spent < budget:
+            for slot in pending:
+                if spent >= budget:
+                    break
+                req = slot.req
+                c = min(self.prefill_chunk,
+                        req.prompt_len - slot.prefill_cursor)
+                chunk = req.prompt[slot.prefill_cursor:
+                                   slot.prefill_cursor + c]
+                t0 = time.monotonic()
+                params = self.engine.step_params()
+                logits, slot.pcache = self.engine.prefill_chunk_step(
+                    params, slot.pcache, chunk, slot.prefill_cursor)
+                dt = time.monotonic() - t0
+                m.record_prefill_chunk(c, dt, stalled=bool(pool.active()))
+                slot.prefill_cursor += c
+                spent += c
+                if slot.prefill_cursor >= req.prompt_len:
+                    if not bool(jnp.isfinite(logits[0, -1]).all()):
+                        raise RuntimeError(
+                            "non-finite prefill logits (compressed "
+                            "reconstruction or model numerics are broken)")
+                    tok = int(jnp.argmax(logits[0, -1]))
+                    pool.install(slot, slot.pcache, tok)
+                    self._record_first_token(req, tok)
+                    m.record_admit(1, 0.0, tokens=1)
+                    self._maybe_finish(pool, slot, completed)
+            pending = [s for s in pending if s.prefilling]
 
     def _step(self, pool: SlotPool, completed: list[Request]) -> None:
         m = self.engine.metrics
@@ -388,14 +848,11 @@ class Scheduler:
                     f"non-finite logits in decode step for request "
                     f"{slot.req.rid} (compressed reconstruction or model "
                     f"numerics are broken)")
-            req = slot.req
-            req.generated.append(tok)
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                pool.retire(slot)         # admit-on-retire: lane refills
-                completed.append(req)     # before the next decode step
-                m.record_completed(1)
+            slot.req.generated.append(tok)
+            self._maybe_finish(pool, slot, completed)
         m.record_decode_step(n_active, time.monotonic() - t0,
                              n_slots=pool.n_slots)
+        m.record_pages(pool.pages_in_use(),
+                       pool.allocator.total if pool.paged else 0)
         if self.log_every and m.decode_steps % self.log_every == 0:
             self.emit(self.engine.stats_line())

@@ -1,0 +1,234 @@
+"""Chunked prefill + paged KV lanes: token equivalence against the
+monolithic PR-2 paths, page-allocator invariants (no leak, no double
+allocation, cross-slot isolation), and pool growth without decode
+recompiles."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.api import get_model, supports_chunked_prefill
+from repro.runtime import PageAllocator, Scheduler, ServeEngine
+from tests.test_models import reduced
+
+
+def make_engine(arch="minitron-8b", seed=0):
+    cfg = reduced(arch)
+    params = jax.tree_util.tree_map(
+        np.asarray, get_model(cfg).init_params(cfg, jax.random.PRNGKey(seed)))
+    return ServeEngine(cfg, params, compress=True)
+
+
+def serve(engine, reqs, **kw):
+    """-> {request index: generated token tuple}."""
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("buckets", (32,))
+    sched = Scheduler(engine, **kw)
+    rids = {}
+    for i, r in enumerate(reqs):
+        rids[sched.submit(*r).rid] = i
+    done = sched.run()
+    assert len(done) == len(reqs)
+    return {rids[r.rid]: tuple(r.generated) for r in done}
+
+
+MIXED = [(5, 7), (12, 2), (20, 5), (6, 9), (3, 1), (9, 4)]
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return make_engine()
+
+
+@pytest.fixture(scope="module")
+def baseline(engine):
+    """Monolithic-prefill, monolithic-lane tokens (the PR-2 path)."""
+    rng = np.random.default_rng(7)
+    reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g) for L, g in MIXED]
+    return reqs, serve(engine, reqs)
+
+
+class TestTokenEquivalence:
+    @pytest.mark.parametrize("chunk", [1, 3, 5, 64])
+    def test_chunked_prefill_any_chunk_size(self, engine, baseline, chunk):
+        reqs, base = baseline
+        assert serve(engine, reqs, prefill_chunk=chunk) == base
+
+    @pytest.mark.parametrize("page", [4, 8, 16, 32])
+    def test_paged_kv_any_page_size(self, engine, baseline, page):
+        """Any page size dividing slot_len — including one page == whole
+        lane (page=32: slots are 32 long for the MIXED trace)."""
+        reqs, base = baseline
+        assert serve(engine, reqs, kv_page_size=page) == base
+
+    def test_chunked_and_paged_combined(self, engine, baseline):
+        reqs, base = baseline
+        assert serve(engine, reqs, prefill_chunk=3, kv_page_size=4) == base
+        assert serve(engine, reqs, prefill_chunk=5, kv_page_size=8,
+                     mode="wave") == base
+
+    def test_prefill_budget_does_not_change_tokens(self, engine, baseline):
+        reqs, base = baseline
+        assert serve(engine, reqs, prefill_chunk=2,
+                     prefill_budget=16) == base
+
+    def test_overcommitted_pool_defers_but_matches(self, engine, baseline):
+        """A pool too small to back every slot admits fewer requests at a
+        time (reservation gating) but generates identical tokens."""
+        reqs, base = baseline
+        # slots need up to 8 pages of 4; 9 usable pages < 2 slots x 8
+        assert serve(engine, reqs, kv_page_size=4, kv_pages=10) == base
+
+    @pytest.mark.parametrize("arch", ["gemma2-2b", "deepseek-v2-236b"])
+    def test_windowed_and_mla_archs(self, arch):
+        """Rolling-window (gemma2 local/global) and MLA latent caches:
+        windowed leaves stay per-slot lanes, latent leaves page."""
+        engine = make_engine(arch)
+        rng = np.random.default_rng(3)
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g)
+                for L, g in [(20, 6), (4, 3), (11, 8)]]
+        base = serve(engine, reqs)
+        assert serve(engine, reqs, prefill_chunk=6, kv_page_size=8) == base
+
+    def test_recurrent_arch_falls_back_to_monolithic(self):
+        """recurrentgemma has RG-LRU blocks -> chunked prefill is gated
+        off with a note, and serving still completes correctly."""
+        engine = make_engine("recurrentgemma-2b")
+        assert not supports_chunked_prefill(engine.cfg)
+        notes = []
+        rng = np.random.default_rng(5)
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, 6), 4)]
+        base = serve(engine, reqs)
+        out = serve(engine, reqs, prefill_chunk=4, emit=notes.append)
+        assert out == base
+        assert any("monolithic" in n for n in notes)
+
+
+class TestPageAllocator:
+    def test_free_xor_allocated(self):
+        a = PageAllocator(range(1, 9))
+        assert a.reserve(5)
+        got = [a.alloc() for _ in range(5)]
+        assert len(set(got)) == 5                      # no double allocation
+        assert a.n_free + a.n_allocated == a.total
+        a.release(got[:2])
+        assert a.n_free + a.n_allocated == a.total
+        # released pages can be handed out again, still unique vs live ones
+        assert a.reserve(2)
+        again = [a.alloc() for _ in range(2)]
+        assert not set(again) & set(got[2:])
+
+    def test_reservation_gates_allocation(self):
+        a = PageAllocator(range(4))
+        assert a.reserve(3)
+        assert not a.reserve(2)                        # only 1 unreserved
+        assert a.reserve(1)
+        assert a.available() == 0
+        with pytest.raises(AssertionError):
+            PageAllocator(range(2)).alloc()            # alloc w/o reserve
+
+    def test_double_free_caught(self):
+        a = PageAllocator(range(4))
+        a.reserve(1)
+        pid = a.alloc()
+        a.release([pid])
+        with pytest.raises(AssertionError):
+            a.release([pid])
+
+
+class TestPoolInvariants:
+    def test_no_page_leaked_after_retire(self, engine, baseline):
+        reqs, _ = baseline
+        sched = Scheduler(engine, batch_size=2, buckets=(32,),
+                          kv_page_size=4, prefill_chunk=3)
+        for r in reqs:
+            sched.submit(*r)
+        sched.run()
+        pool = sched._pool
+        assert pool.allocator.n_allocated == 0         # every page returned
+        assert pool.allocator.reserved == 0            # every earmark undone
+        assert pool.allocator.n_free == pool.allocator.total
+        assert (pool.table == 0).all()                 # rows reset to dummy
+
+    def test_tables_disjoint_during_serving(self, engine):
+        """A physical page is owned by at most one slot at every decode
+        step (cache reads can never cross into another slot's pages)."""
+        rng = np.random.default_rng(11)
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g)
+                for L, g in [(9, 6), (4, 8), (13, 3), (6, 5)]]
+        sched = Scheduler(engine, batch_size=2, buckets=(16,),
+                          kv_page_size=4)
+        for r in reqs:
+            sched.submit(*r)
+        seen = []
+
+        orig_step = sched._step
+
+        def checked_step(pool, completed):
+            live = pool.table[pool.table != 0]
+            assert len(live) == len(set(live.tolist())), \
+                f"page owned by two slots: {pool.table}"
+            assert pool.allocator.n_allocated == len(live)
+            seen.append(len(live))
+            orig_step(pool, completed)
+
+        sched._step = checked_step
+        done = sched.run()
+        assert len(done) == len(reqs) and seen and max(seen) > 0
+
+    def test_short_requests_use_fewer_pages(self, engine):
+        """Paged memory is per-request need, not per-pool worst case: a
+        short request's slot allocates only the pages its positions
+        reach."""
+        sched = Scheduler(engine, batch_size=2, buckets=(32,),
+                          kv_page_size=4, slot_len=32)
+        sched.submit(np.arange(3) % engine.cfg.vocab_size, 2)    # short
+        sched.submit(np.arange(20) % engine.cfg.vocab_size, 8)   # long
+        sched.run()
+        m = engine.metrics
+        assert m.pages_total > 0
+        # worst case would be 2 slots x 8 pages; the mixed pair peaks lower
+        assert m.pages_in_use <= 8 + 2
+
+    def test_grow_pages_keeps_decode_compile(self, engine):
+        """Growing the physical pool re-traces only the page gather /
+        scatter; the compiled vmapped decode step is untouched."""
+        rng = np.random.default_rng(2)
+        sched = Scheduler(engine, batch_size=2, buckets=(16,),
+                          kv_page_size=4, kv_pages=5)
+        sched.submit(rng.integers(0, engine.cfg.vocab_size, 8), 6)
+        out1 = sched.run()
+        assert len(out1) == 1
+        n0 = engine._slot_decode_jit._cache_size()
+        sched._pool.grow_pages(9)
+        sched.submit(rng.integers(0, engine.cfg.vocab_size, 8), 6)
+        sched.submit(rng.integers(0, engine.cfg.vocab_size, 8), 6)
+        out2 = sched.run()
+        assert len(out2) == 2
+        assert engine._slot_decode_jit._cache_size() == n0
+        assert sched._pool.allocator.n_allocated == 0
+
+    def test_undersized_pool_raises_instead_of_spinning(self, engine):
+        """A pool that cannot back even one full slot is rejected up
+        front (otherwise admission would defer forever)."""
+        sched = Scheduler(engine, batch_size=2, buckets=(32,),
+                          kv_page_size=4, kv_pages=3, slot_len=32)
+        sched.submit(np.arange(20) % engine.cfg.vocab_size, 8)
+        with pytest.raises(ValueError, match="cannot back"):
+            sched.run()
+
+
+class TestMetrics:
+    def test_chunk_and_page_counters(self, engine):
+        engine.metrics = type(engine.metrics)()
+        rng = np.random.default_rng(13)
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, 10), 4)
+                for _ in range(3)]
+        serve(engine, reqs, prefill_chunk=4, kv_page_size=4)
+        m = engine.metrics
+        # 10-token prompts in 4-token chunks -> 3 chunks each
+        assert m.prefill_chunks == 9
+        assert m.prefill_chunk_tokens == 30
+        assert m.pages_total > 0
+        assert 0.0 < m.page_occupancy() <= 1.0
+        assert "chunks" in m.stats_line() and "pages" in m.stats_line()
