@@ -30,8 +30,25 @@ Three sections:
    first token stops scaling with their neighbours' prompt lengths.
    Token-identical by assertion.
 
+5. **Attention backends** (``--trace``/``--smoke``): the same request mix
+   decoded under ``attn_backend="gathered"`` (copy each slot's pages into
+   a contiguous view per step, two full cache copies) vs
+   ``"pallas_paged"`` (the in-kernel paged-attention backend reads the
+   page pool in place).  Token-identical by assertion; the table reports
+   decode-step latency and the per-step KV bytes each backend moved /
+   avoided.
+
+Real traffic traces: ``--trace-file path.jsonl`` replays a recorded
+trace (one JSON object per line: ``arrival_time`` seconds, ``prompt_len``,
+``decode_len``, ``tenant``) through the same policy sweep the synthetic
+generator uses; tenant popularity for the FrequencyWeighted prior is
+estimated from the trace itself.  A tiny sample lives at
+``benchmarks/traces/sample.jsonl`` and is replayed by ``--smoke``.
+
 Run:  PYTHONPATH=src python benchmarks/serve_cache.py [--steps 24]
       PYTHONPATH=src python benchmarks/serve_cache.py --trace bursty
+      PYTHONPATH=src python benchmarks/serve_cache.py \
+          --trace-file benchmarks/traces/sample.jsonl
       PYTHONPATH=src python benchmarks/serve_cache.py --smoke
 """
 
@@ -39,11 +56,15 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import pathlib
 import time
 
 import numpy as np
 
 from repro.runtime import DecodeTileCache, WeightStore
+
+SAMPLE_TRACE = pathlib.Path(__file__).parent / "traces" / "sample.jsonl"
 
 LAYERS = 4
 D, F = 288, 512
@@ -104,6 +125,7 @@ class TraceRequest:
     arrival: int        # earliest admission step
     tenant: int
     gen: int            # decode steps (tokens) the request runs for
+    prompt_len: int = 8  # prompt tokens (trace-file ingestion records it)
 
 
 @dataclasses.dataclass
@@ -148,6 +170,41 @@ def bursty_trace(rng, *, n_tenants: int = 8, tiles_per_tenant: int = 32,
                  popularity)
 
 
+def load_trace_file(path, *, time_step: float = 0.05,
+                    tiles_per_tenant: int = 32,
+                    tile_bytes: int = 4096) -> Trace:
+    """Ingest a recorded serving trace (JSONL) into a :class:`Trace`.
+
+    One JSON object per line with keys ``arrival_time`` (seconds from
+    trace start), ``prompt_len``, ``decode_len``, and ``tenant`` (any
+    hashable label; mapped to dense indices in order of first
+    appearance).  ``time_step`` converts wall-clock arrivals into
+    scheduler admission steps.  The FrequencyWeighted prior that the
+    synthetic generator takes from its Zipf marginal is estimated here
+    from the trace's own tenant frequencies — the serving-time stand-in
+    for the paper's §III-A occurrence histogram.
+    """
+    tenants: dict = {}
+    reqs = []
+    for line in pathlib.Path(path).read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        row = json.loads(line)
+        tenant = tenants.setdefault(row["tenant"], len(tenants))
+        reqs.append(TraceRequest(
+            arrival=int(float(row["arrival_time"]) / time_step),
+            tenant=tenant,
+            gen=int(row["decode_len"]),
+            prompt_len=int(row["prompt_len"])))
+    if not reqs:
+        raise ValueError(f"empty trace file: {path}")
+    counts = np.bincount([r.tenant for r in reqs],
+                         minlength=len(tenants)).astype(np.float64)
+    return Trace(reqs, len(tenants), tiles_per_tenant, tile_bytes,
+                 counts / counts.sum())
+
+
 def replay(trace: Trace, cache: DecodeTileCache, n_slots: int = 6) -> dict:
     """Serve the trace with continuous slots, touching every tile of a
     request's tenant each decode step (the materialize scan) -> stats."""
@@ -181,13 +238,15 @@ def replay(trace: Trace, cache: DecodeTileCache, n_slots: int = 6) -> dict:
     return cache.stats()
 
 
-def trace_replay(smoke: bool) -> None:
-    rng = np.random.default_rng(0)
-    trace = bursty_trace(rng, n_requests=24 if smoke else 64)
+def trace_replay(smoke: bool, trace: Trace | None = None,
+                 label: str = "bursty") -> None:
+    if trace is None:
+        rng = np.random.default_rng(0)
+        trace = bursty_trace(rng, n_requests=24 if smoke else 64)
     fractions = SMOKE_FRACTIONS if smoke else TRACE_FRACTIONS
     total = trace.total_bytes
-    hot_share = float(trace.popularity[0])
-    print(f"bursty trace: {len(trace.requests)} requests over "
+    hot_share = float(trace.popularity.max())
+    print(f"{label} trace: {len(trace.requests)} requests over "
           f"{trace.n_tenants} tenants x {trace.tiles_per_tenant} tiles "
           f"({total // 1024} KiB universe), hot tenant carries "
           f"~{hot_share * 100:.0f}% of arrivals\n")
@@ -206,10 +265,12 @@ def trace_replay(smoke: bool) -> None:
         worst = margin if worst is None else min(worst, margin)
     print(f"\nFrequencyWeighted - LRU hit-rate margin, worst capacity: "
           f"{worst * 100:+.1f} pts")
-    # the replay is fully deterministic (seeded trace, no timing), so the
-    # paper-skew claim is a hard invariant CI can enforce
-    assert worst >= 0, \
-        f"FrequencyWeighted lost to LRU by {-worst * 100:.1f} pts"
+    # the synthetic replay is fully deterministic (seeded trace, no
+    # timing), so the paper-skew claim is a hard invariant CI can
+    # enforce; recorded traces carry no such guarantee and just report
+    if label == "bursty":
+        assert worst >= 0, \
+            f"FrequencyWeighted lost to LRU by {-worst * 100:.1f} pts"
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +361,66 @@ def prefill_compare(smoke: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# attention backends: paged-gather vs in-kernel decode on the real scheduler
+# ---------------------------------------------------------------------------
+
+def backend_compare(smoke: bool) -> None:
+    """Decode-step latency under the two attention backends.
+
+    ``gathered`` copies every slot's pages into a contiguous lane view and
+    scatters them back *each step* — two full cache copies on the decode
+    hot path.  ``pallas_paged`` hands the donated page pool + page tables
+    to the paged-attention kernel, which walks the table in-kernel: the
+    per-step copies disappear (the kv-gather metric must read exactly 0,
+    asserted here).  Tokens are identical by assertion; on CPU the kernel
+    runs interpreted, so the latency column shows the copy-free data path,
+    not TPU-compiled kernel speed.
+    """
+    from repro.runtime import Scheduler, ServeEngine
+
+    cfg, params = _reduced_lm()
+    rng = np.random.default_rng(0)
+    n = 6 if smoke else 12
+    reqs = [(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 20))),
+             int(rng.integers(4, 12))) for _ in range(n)]
+    slot_len = max(len(p) + g for p, g in reqs)
+    print(f"\nattention backends: {n} requests, batch 2, page size 8, "
+          f"reduced minitron-8b")
+    print(f"{'backend':>14} | {'ms/step':>8} | {'kv moved/step':>13} | "
+          f"{'kv avoided/step':>15}")
+
+    results = {}
+    for backend in ("gathered", "pallas_paged"):
+        engine = ServeEngine(cfg, params, compress=True)
+        sched = Scheduler(engine, batch_size=2, slot_len=slot_len,
+                          buckets=(32,), kv_page_size=8,
+                          attn_backend=backend)
+        sched.submit(reqs[0][0], 2)              # warmup compile
+        sched.run()
+        engine.metrics = type(engine.metrics)()
+        for prompt, gen in reqs:
+            sched.submit(prompt, gen)
+        done = sched.run()
+        assert len(done) == n
+        m = engine.metrics
+        steps = max(m.decode_steps, 1)
+        results[backend] = (
+            m.ms_per_token(), m.kv_gather_bytes, m.kv_gather_bytes_avoided,
+            tuple(tuple(r.generated) for r in
+                  sorted(done, key=lambda r: r.rid)[-n:]))
+        print(f"{backend:>14} | {m.ms_per_token():>8.1f} | "
+              f"{m.kv_gather_bytes // steps:>13} | "
+              f"{m.kv_gather_bytes_avoided // steps:>15}")
+    assert results["gathered"][3] == results["pallas_paged"][3], \
+        "attention backend changed generated tokens"
+    assert results["pallas_paged"][1] == 0, \
+        "pallas_paged backend copied KV on the decode hot path"
+    assert results["pallas_paged"][2] > 0 and results["gathered"][1] > 0
+    print("  pallas_paged moved 0 gather/scatter bytes "
+          "(token-identical outputs)")
+
+
+# ---------------------------------------------------------------------------
 # slot-level continuous batching vs wave mode on the real scheduler
 # ---------------------------------------------------------------------------
 
@@ -366,15 +487,37 @@ def main():
     ap.add_argument("--trace", choices=["bursty"], default=None,
                     help="replay a synthetic arrival trace through every "
                          "eviction policy + compare scheduler modes")
+    ap.add_argument("--trace-file", type=str, default=None,
+                    help="replay a recorded JSONL trace (arrival_time, "
+                         "prompt_len, decode_len, tenant per line) through "
+                         "every eviction policy; see benchmarks/traces/"
+                         "sample.jsonl")
+    ap.add_argument("--trace-time-step", type=float, default=0.05,
+                    help="seconds of recorded arrival time per scheduler "
+                         "admission step (trace-file replay)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small CI run: trace replay (all policies) + "
-                         "reduced slot-vs-wave comparison")
+                    help="small CI run: synthetic + sample-file trace "
+                         "replay (all policies), slot-vs-wave, chunked "
+                         "prefill, and the attention-backend comparison")
     args = ap.parse_args()
 
+    if args.trace_file:
+        trace = load_trace_file(args.trace_file,
+                                time_step=args.trace_time_step)
+        trace_replay(smoke=args.smoke, trace=trace,
+                     label=pathlib.Path(args.trace_file).name)
+        if not (args.trace or args.smoke):
+            return
     if args.trace or args.smoke:
         trace_replay(smoke=args.smoke)
+        if args.smoke:
+            print()
+            trace_replay(smoke=True,
+                         trace=load_trace_file(SAMPLE_TRACE),
+                         label="sample.jsonl")
         slot_vs_wave(smoke=args.smoke)
         prefill_compare(smoke=args.smoke)
+        backend_compare(smoke=args.smoke)
         return
     capacity_sweep(args.steps)
 

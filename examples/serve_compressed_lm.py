@@ -18,7 +18,10 @@ occurrence counts) on the same serving loop.
 
 A final section serves a reduced LM end-to-end through the Scheduler with
 chunked prefill + paged KV lanes (``--prefill-chunk`` / ``--kv-page-size``)
-and asserts the tokens match the monolithic configuration.
+and asserts the tokens match the monolithic configuration — then flips the
+attention backend to ``pallas_paged`` (the in-kernel paged decode
+attention) and asserts the tokens *still* match while the per-step KV
+gather/scatter byte counter reads exactly zero.
 
 Run:  PYTHONPATH=src python examples/serve_compressed_lm.py
       PYTHONPATH=src python examples/serve_compressed_lm.py \
@@ -151,3 +154,17 @@ print(f"\n  scheduler: chunked prefill (chunk {args.prefill_chunk}) + "
       f"paged KV (page {args.kv_page_size}) == monolithic  [OK]")
 print(f"  {m.prefill_chunks} prefill chunks, page pool {m.pages_total}, "
       f"mean page occupancy {m.page_occupancy() * 100:.0f}%")
+
+# -- attention backend seam: in-kernel paged decode attention ---------------
+# Same pages, different reader: instead of gathering every slot's pages
+# into a contiguous view each decode step (two full cache copies), the
+# pallas_paged backend hands the page pool + page tables to a Pallas
+# kernel that walks the table in-kernel.  Tokens must not change, and the
+# hot-path copy counter must read exactly zero.
+kernel_toks, mk = serve_tokens(kv_page_size=args.kv_page_size,
+                               attn_backend="pallas_paged")
+assert mono_toks == kernel_toks
+assert mk.kv_gather_bytes == 0
+print(f"  attn backend pallas_paged == gathered  [OK]  "
+      f"(0 KV bytes gathered on the decode path, "
+      f"{mk.kv_gather_bytes_avoided} avoided)")

@@ -1,0 +1,171 @@
+"""Pallas TPU kernel: in-kernel paged decode attention.
+
+Decode attention that consumes the scheduler's paged KV layout *directly*:
+the physical page pool ``(n_pages, page, KH, D)`` plus a per-slot page
+table and per-slot lengths.  Each ``(slot, logical page)`` grid step pulls
+exactly one physical page into VMEM — the BlockSpec index map reads the
+page table through scalar prefetch, so the DMA engine walks the table and
+never touches pages the slot does not own — applies the absolute-position
+mask, and folds the page into an online-softmax accumulator held in VMEM
+scratch.  No contiguous per-slot view of the cache is ever materialised,
+in HBM or anywhere else: this is the serving analogue of the paper's
+in-pipeline decoding unit (§IV), which consumes operands in their at-rest
+layout instead of expanding them into memory first.
+
+Layout contract (shared with ``runtime.scheduler.SlotPool``):
+
+  * physical page 0 is the dummy sink — table entries past a slot's length
+    point at it and it is never read as a valid position (every position
+    ``< lengths[s]`` has a real page, and everything else is masked);
+  * a slot's logical page ``j`` covers absolute positions
+    ``[j * page, (j + 1) * page)``;
+  * ``lengths[s]`` = number of valid positions = current position + 1
+    (the current token's K/V is written into the pool *before* the call).
+
+The optional second score operand ``(q2, k2_pages)`` serves MLA absorbed
+decode: scores are ``q . k + q2 . k2`` (latent + rope parts) over a
+single shared KV head, and ``v_pages`` is the latent pool itself.
+``scale`` is applied to the summed scores (MLA) — GQA callers pre-scale
+``q`` and leave it at 1.0, matching ``attention.decode_attention``'s
+operation order exactly.
+
+``interpret=True`` runs the identical kernel through the Pallas
+interpreter on CPU — how CI exercises it (same convention as
+``fused_decode_matmul``).  Block shapes follow the model's head dims; on
+real TPUs pad heads/pages toward (8, 128) tiles for peak DMA efficiency.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, *rest, page: int,
+            kh: int, g: int, window: int, softcap_val: float, scale: float,
+            has_q2: bool):
+    if has_q2:
+        q2_ref, k2_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    s_idx = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- one page of scores: (KH, G, page) f32 ---------------------------
+    q = q_ref[0].astype(jnp.float32).reshape(kh, g, q_ref.shape[-1])
+    k = k_ref[0].astype(jnp.float32)                      # (page, KH, D)
+    s = jnp.einsum("kgd,pkd->kgp", q, k)
+    if has_q2:
+        q2 = q2_ref[0].astype(jnp.float32).reshape(kh, g, q2_ref.shape[-1])
+        s = s + jnp.einsum("kgd,pkd->kgp", q2,
+                           k2_ref[0].astype(jnp.float32))
+    if scale != 1.0:
+        s = s * scale
+    if softcap_val:
+        s = jnp.tanh(s / softcap_val) * softcap_val
+
+    # ---- absolute-position mask ------------------------------------------
+    length = len_ref[s_idx]
+    gpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    valid = gpos < length
+    if window:
+        valid &= gpos > length - 1 - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    # ---- online softmax accumulation across pages ------------------------
+    m_prev = m_ref[...]                                   # (KH, G)
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    pv = jnp.einsum("kgp,pkv->kgv", p, v_ref[0].astype(jnp.float32))
+    acc_ref[...] = acc_ref[...] * alpha.reshape(kh * g, 1) \
+        + pv.reshape(kh * g, -1)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-20).reshape(kh * g, 1)
+        o_ref[0] = (acc_ref[...] / l).reshape(o_ref.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap_val",
+                                             "scale", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,            # (S, H, D)   this step's queries, one per slot
+    k_pages: jax.Array,      # (n_pages, page, KH, D)   physical key pool
+    v_pages: jax.Array,      # (n_pages, page, KH, Dv)  physical value pool
+    table: jax.Array,        # (S, P) int32 physical page per logical page
+    lengths: jax.Array,      # (S,) int32   valid positions per slot
+    q2: jax.Array | None = None,        # (S, H, D2)  MLA rope-part queries
+    k2_pages: jax.Array | None = None,  # (n_pages, page, KH, D2)
+    *,
+    window: int = 0,
+    softcap_val: float = 0.0,
+    scale: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """out (S, H, Dv) float32 — per-slot decode attention over paged KV.
+
+    Numerically equivalent to gathering each slot's pages into a contiguous
+    cache and running ``attention.decode_attention`` (the reference oracle
+    in tests/test_paged_attention.py); the cache copy just never happens.
+    """
+    s_n, h, d = q.shape
+    n_pages, page, kh, dk = k_pages.shape
+    dv = v_pages.shape[-1]
+    assert dk == d, (dk, d)
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    pps = table.shape[1]
+
+    in_specs = [
+        pl.BlockSpec((1, h, d), lambda s, j, t, ln: (s, 0, 0)),
+        pl.BlockSpec((1, page, kh, d),
+                     lambda s, j, t, ln: (t[s, j], 0, 0, 0)),
+        pl.BlockSpec((1, page, kh, dv),
+                     lambda s, j, t, ln: (t[s, j], 0, 0, 0)),
+    ]
+    args = [q, k_pages, v_pages]
+    if q2 is not None:
+        d2 = q2.shape[-1]
+        in_specs += [
+            pl.BlockSpec((1, h, d2), lambda s, j, t, ln: (s, 0, 0)),
+            pl.BlockSpec((1, page, kh, d2),
+                         lambda s, j, t, ln: (t[s, j], 0, 0, 0)),
+        ]
+        args += [q2, k2_pages]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s_n, pps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, h, dv), lambda s, j, t, ln: (s, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kh, g), jnp.float32),     # running max
+            pltpu.VMEM((kh, g), jnp.float32),     # running normaliser
+            pltpu.VMEM((h, dv), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page=page, kh=kh, g=g, window=window,
+                          softcap_val=softcap_val, scale=scale,
+                          has_q2=q2 is not None),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_n, h, dv), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), *args)

@@ -10,12 +10,15 @@ wave-granular scheduling (token-identical, lower slot occupancy);
 ``--policy`` picks the decode-cache eviction policy;
 ``--prefill-chunk`` interleaves prompt chunks with decode steps and
 ``--kv-page-size`` backs the KV lanes with demand-allocated pages —
-both token-identical to the monolithic defaults.
+both token-identical to the monolithic defaults.  ``--attn-backend
+pallas_paged`` decodes straight over the page pool with the in-kernel
+paged-attention kernel (zero per-step KV gather/scatter copies; also
+token-identical).
 
   PYTHONPATH=src python -m repro.launch.serve --scale tiny
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
       --batch 4 --prompt-len 64 --gen 32 --requests 8 --policy freq \
-      --prefill-chunk 16 --kv-page-size 16
+      --prefill-chunk 16 --kv-page-size 16 --attn-backend pallas_paged
 """
 
 from __future__ import annotations
@@ -67,9 +70,16 @@ def main():
                          "allocated on demand (omit = monolithic "
                          "slot_len lanes)")
     ap.add_argument("--kv-pages", type=int, default=None,
-                    help="physical page-pool size (default: fully backs "
+                    help="logical page-pool size (default: fully backs "
                          "every slot; smaller = overcommit, admission "
                          "defers when reservations fail)")
+    ap.add_argument("--attn-backend", choices=["gathered", "pallas_paged"],
+                    default="gathered",
+                    help="how decode reads paged KV: gathered (copy pages "
+                         "into contiguous views each step, the reference) "
+                         "or pallas_paged (in-kernel paged attention, "
+                         "zero per-step cache copies; needs "
+                         "--kv-page-size)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable async next-layer tile prefetch")
     ap.add_argument("--no-compress", action="store_true",
@@ -105,6 +115,7 @@ def main():
                           prefill_budget=args.prefill_budget,
                           kv_page_size=args.kv_page_size,
                           kv_pages=args.kv_pages,
+                          attn_backend=args.attn_backend,
                           log_every=args.log_every)
         rng = np.random.default_rng(0)
         for _ in range(n_requests):
@@ -137,6 +148,9 @@ def main():
         print(f"kv pages: {args.kv_page_size}-token pages, pool "
               f"{m.pages_total}, mean occupancy "
               f"{m.page_occupancy() * 100:.0f}%")
+        print(f"kv gather ({sched.attn_backend} backend): "
+              f"{m.kv_gather_bytes} bytes copied on the decode hot path, "
+              f"{m.kv_gather_bytes_avoided} avoided in-kernel")
     if engine.compressed:
         st = engine.cache.stats()
         print(f"decode-tile cache ({st['policy']}): {st['hits']} hits / "

@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
+import jax
+
 from repro.models import encdec, transformer
 
 
@@ -24,7 +26,18 @@ class ModelAPI:
     prefill_chunk: Callable[..., Any] | None = None
     # (cfg, params, cache, tokens (B, S), pos) -> (last logits, new cache);
     # None when the family cannot resume a prompt mid-cache (encoder-decoder)
+    decode_step_paged: Callable[..., Any] | None = None
+    # (cfg, params, paged cache, table, tokens (S, 1), poss (S,), *,
+    #  paged_flags, page_size, interpret) -> (logits (S, 1, V), new cache);
+    # the in-kernel half of the attention-backend seam — None when the
+    # family cannot consume a paged cache (encoder-decoder)
 
+
+# the attention backends the serving stack can decode with: "gathered"
+# copies each slot's pages into a contiguous lane view per step (the
+# reference oracle), "pallas_paged" hands the page pool + page tables to
+# decode_step_paged, whose Pallas kernel walks the table in-kernel
+ATTN_BACKENDS = ("gathered", "pallas_paged")
 
 # block kinds whose caches can resume a prompt mid-prefill (attention-style
 # KV caches); recurrent states (ssm / rglru) and cross-attention decoders
@@ -32,6 +45,12 @@ class ModelAPI:
 CHUNKABLE_KINDS = frozenset(
     ("attn", "swa", "local", "global", "attn_local",
      "mla_dense", "mla_moe", "swa_moe", "moe"))
+
+# block kinds the paged decode-attention backend can serve: attention-style
+# caches (full-length leaves page; rolling-window leaves stay lanes and run
+# the reference path in the same step); recurrent state and cross-attention
+# decoders have no paged equivalent and fall back to "gathered"
+PAGEABLE_KINDS = CHUNKABLE_KINDS
 
 
 def supports_chunked_prefill(cfg) -> bool:
@@ -45,6 +64,60 @@ def supports_chunked_prefill(cfg) -> bool:
     return all(k in CHUNKABLE_KINDS for k in kinds)
 
 
+def supports_paged_attention(cfg) -> bool:
+    """True if ``cfg`` can decode with the ``pallas_paged`` attention
+    backend: every block keeps an attention-style cache (pageable or
+    lane-backed) and the family exposes :func:`transformer.decode_step_paged`."""
+    if cfg.family == "audio":
+        return False
+    kinds = (tuple(cfg.prefix_kinds) + tuple(cfg.scan_pattern)
+             + tuple(cfg.suffix_kinds))
+    return all(k in PAGEABLE_KINDS for k in kinds)
+
+
+def cache_layout(api: "ModelAPI", cfg, slot_len: int):
+    """Probe the cache-spec factory for each leaf's memory role.
+
+    Returns ``(batch_axes, len_axes)``, two tuples aligned with the flat
+    leaves of ``api.init_cache_specs(cfg, 1, slot_len)``:
+
+      * ``batch_axes[i]`` — the axis that scales with the batch argument
+        (where the scheduler threads the slot dimension);
+      * ``len_axes[i]``  — the axis that scales with cache length, or
+        ``None`` for leaves that do not (rolling-window KV, recurrent
+        state, cross-attention): these are *not pageable* and stay
+        per-slot lanes under every backend.
+
+    This probe is the single source of truth for "which leaves are
+    pageable, kernel-consumable": the SlotPool uses it to build the page
+    pools and ``decode_step_paged`` receives the pageability mask derived
+    from it, so the two can never disagree about the layout.
+    """
+    leaves_a = jax.tree_util.tree_leaves(
+        api.init_cache_specs(cfg, 1, slot_len))
+    leaves_l = jax.tree_util.tree_leaves(
+        api.init_cache_specs(cfg, 1, 2 * slot_len))
+    leaves_b = jax.tree_util.tree_leaves(
+        api.init_cache_specs(cfg, 2, slot_len))
+    batch_axes, len_axes = [], []
+    for sa, sl, sb in zip(leaves_a, leaves_l, leaves_b):
+        bdiff = [i for i, (a, b) in enumerate(zip(sa.shape, sb.shape))
+                 if a != b]
+        assert bdiff == [bdiff[0]] and sa.shape[bdiff[0]] == 1 and \
+            sb.shape[bdiff[0]] == 2, (sa.shape, sb.shape)
+        batch_axes.append(bdiff[0])
+        if sa.shape == sl.shape:
+            len_axes.append(None)
+            continue
+        ldiff = [i for i, (a, b) in enumerate(zip(sa.shape, sl.shape))
+                 if a != b]
+        assert len(sa.shape) == len(sl.shape) and ldiff == [ldiff[0]] and \
+            sa.shape[ldiff[0]] == slot_len and \
+            sl.shape[ldiff[0]] == 2 * slot_len, (sa.shape, sl.shape)
+        len_axes.append(ldiff[0])
+    return tuple(batch_axes), tuple(len_axes)
+
+
 def get_model(cfg) -> ModelAPI:
     if cfg.family == "audio":
         return ModelAPI(
@@ -56,6 +129,7 @@ def get_model(cfg) -> ModelAPI:
             init_cache_specs=encdec.init_cache_specs,
             init_cache=encdec.init_cache,
             prefill_chunk=None,
+            decode_step_paged=None,
         )
     return ModelAPI(
         init_params=transformer.init_params,
@@ -66,4 +140,5 @@ def get_model(cfg) -> ModelAPI:
         init_cache_specs=transformer.init_cache_specs,
         init_cache=transformer.init_cache,
         prefill_chunk=transformer.prefill_chunk,
+        decode_step_paged=transformer.decode_step_paged,
     )

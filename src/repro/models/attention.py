@@ -10,6 +10,7 @@ prefill cells and scan-over-layers remat).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 
@@ -20,6 +21,35 @@ from repro.dist.sharding import constrain, seq_shard_attention
 from repro.models.layers import apply_rope, dense_init, rms_norm, softcap
 
 NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedContext:
+    """Per-step state of the ``pallas_paged`` attention backend.
+
+    Present (non-None) only on blocks whose cache leaves are page pools:
+    ``table`` maps each slot's logical pages to physical pages of the
+    shared pool, ``page_size`` is the positions-per-page layout constant,
+    and ``interpret`` routes the Pallas kernel through the interpreter on
+    hosts without a TPU.  Blocks whose leaves stay per-slot lanes
+    (rolling-window KV, recurrent state) receive ``paged=None`` and run
+    the gathered reference path on their lanes.
+    """
+
+    table: jax.Array         # (S, pages_per_slot) int32
+    page_size: int
+    interpret: bool = False
+
+    def write(self, pool: jax.Array, value: jax.Array, pos) -> jax.Array:
+        """Scatter this step's per-slot ``value`` (S, ...) into each
+        slot's current page of ``pool`` (n_pages, page, ...) at position
+        ``pos`` (S,).  This is the layout contract the paged kernel
+        depends on: the current token's K/V is in the pool *before* the
+        kernel walks the table."""
+        pids = self.table[jnp.arange(value.shape[0]),
+                          pos // self.page_size]
+        return pool.at[pids, pos % self.page_size].set(
+            value.astype(pool.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -150,12 +180,19 @@ def decode_attention(
     q: jax.Array,            # (B, 1, H, D)
     k_cache: jax.Array,      # (B, Smax, KH, D)
     v_cache: jax.Array,      # (B, Smax, KH, Dv)
-    cur_pos: jax.Array,      # scalar: position of the current token
+    cur_pos: jax.Array,      # () shared or (B,) per-lane current position
     *,
     window: int = 0,
     attn_softcap: float = 0.0,
     rolling: bool = False,
 ) -> jax.Array:
+    """Reference decode attention over a contiguous per-lane cache.
+
+    ``cur_pos`` may be a scalar (every lane at the same depth — the wave
+    path) or a ``(B,)`` vector (slot serving: each lane has its own
+    position).  This is the oracle the ``pallas_paged`` kernel backend is
+    tested against.
+    """
     b, smax, kh, d = k_cache.shape
     h = q.shape[2]
     g = h // kh
@@ -164,14 +201,16 @@ def decode_attention(
     if attn_softcap:
         s = softcap(s, attn_softcap)
     slot = jnp.arange(smax)
+    cur = jnp.asarray(cur_pos)[..., None]        # (1,) or (B, 1)
     if rolling:
         # rolling window cache: slots hold the last min(cur_pos+1, Smax) keys
-        valid = slot < jnp.minimum(cur_pos + 1, smax)
+        valid = slot < jnp.minimum(cur + 1, smax)
     else:
-        valid = slot <= cur_pos
+        valid = slot <= cur
         if window:
-            valid &= slot > cur_pos - window
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+            valid &= slot > cur - window
+    valid = valid if valid.ndim == 2 else valid[None]      # (B|1, Smax)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, v_cache.shape[-1])
@@ -278,14 +317,36 @@ def attn_apply(
     p: dict, x: jax.Array, cfg, *,
     kind: str,                       # "attn" | "swa" | "local" | "global" | "bidir"
     cache: dict | None = None,       # None = train; dict = prefill/decode
-    pos=None,                        # decode: scalar current position
+    pos=None,                        # decode: () shared or (B,) per-lane pos
     prefix_len: int = 0,
+    paged: PagedContext | None = None,
 ) -> tuple[jax.Array, dict | None]:
     b, s, _ = x.shape
     window = cfg.window if kind in ("swa", "local") else 0
     causal = kind != "bidir"
     decode = cache is not None and s == 1
-    chunked = cache is not None and pos is not None and s > 1
+    chunked = cache is not None and pos is not None and s > 1 and \
+        paged is None
+
+    if paged is not None:
+        # ``pallas_paged`` backend: the cache leaves are the physical page
+        # pools (n_pages, page, KH, HD) shared by every slot; this step's
+        # K/V is scattered into each slot's current page and attention
+        # walks the page table inside the kernel — no contiguous per-slot
+        # view is ever gathered.
+        assert decode, "paged attention is a decode-step backend"
+        from repro.kernels.paged_attention import paged_decode_attention
+        positions = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1))
+        q, k, v = _qkv(p, x, cfg, positions)
+        k_pool = paged.write(cache["k"], k[:, 0], pos)
+        v_pool = paged.write(cache["v"], v[:, 0], pos)
+        hd = cfg.head_dim
+        out = paged_decode_attention(
+            (q[:, 0].astype(jnp.float32) * hd ** -0.5), k_pool, v_pool,
+            paged.table, pos + 1, window=window,
+            softcap_val=cfg.attn_logit_softcap, interpret=paged.interpret)
+        y = out[:, None].reshape(b, s, -1).astype(x.dtype) @ p["wo"]
+        return y, {"k": k_pool, "v": v_pool}
 
     if chunked:
         # chunked prefill: s tokens at absolute positions pos..pos+s-1
@@ -315,17 +376,25 @@ def attn_apply(
                 cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
         new_cache = {"k": k_cache, "v": v_cache}
     elif decode:
-        positions = jnp.full((b, 1), pos, jnp.int32)
-        q, k, v = _qkv(p, x, cfg, positions)
         rolling = bool(window)
-        if rolling:
-            slot = pos % cache["k"].shape[1]
-        else:
-            slot = pos
-        k_cache = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if jnp.ndim(pos) == 0:           # shared position (wave decode)
+            positions = jnp.full((b, 1), pos, jnp.int32)
+            q, k, v = _qkv(p, x, cfg, positions)
+            slot = pos % cache["k"].shape[1] if rolling else pos
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        else:                            # (B,) per-lane positions
+            positions = jnp.asarray(pos, jnp.int32)[:, None]
+            q, k, v = _qkv(p, x, cfg, positions)
+            slot = positions[:, 0] % cache["k"].shape[1] if rolling \
+                else positions[:, 0]
+            lane = jnp.arange(b)
+            k_cache = cache["k"].at[lane, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[lane, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
         out = decode_attention(q, k_cache, v_cache, pos, window=window,
                                attn_softcap=cfg.attn_logit_softcap,
                                rolling=rolling)
@@ -413,7 +482,7 @@ def mla_init(key, cfg, dtype) -> dict:
     }
 
 
-def mla_apply(p, x, cfg, *, cache=None, pos=None):
+def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None):
     b, s, d = x.shape
     h = cfg.num_heads
     r_kv = cfg.kv_lora_rank
@@ -422,8 +491,11 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None):
     # and chunked prefill (s > 1): every einsum already carries the s axis,
     # only the causal mask needs per-query positions
     decode = cache is not None and pos is not None
-    positions = (pos + jnp.arange(s)[None, :] if decode
-                 else jnp.arange(s)[None, :])
+    if paged is not None:
+        positions = jnp.asarray(pos, jnp.int32)[:, None]      # (B, 1)
+    else:
+        positions = (pos + jnp.arange(s)[None, :] if decode
+                     else jnp.arange(s)[None, :])
 
     cq = rms_norm(p["q_norm"], x @ p["w_dq"], cfg.norm_eps)
     q = (cq @ p["w_uq"]).reshape(b, s, h, dn + dr)
@@ -433,6 +505,30 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None):
     dkv = x @ p["w_dkv"]                                  # (B, S, r_kv + dr)
     c_kv = rms_norm(p["kv_norm"], dkv[..., :r_kv], cfg.norm_eps)
     k_pe = apply_rope(dkv[..., None, r_kv:], positions, cfg.rope_theta)[:, :, 0]
+
+    if paged is not None:
+        # absorbed decode straight over the paged latent pools: the MLA
+        # latent is one shared KV "head" whose key has a latent part
+        # (c_kv, scored against q absorbed through w_uk) and a rope part
+        # (k_pe) — exactly the kernel's (q, k) + (q2, k2) split, with the
+        # latent pool doubling as the value pool.
+        assert s == 1, "paged MLA is a decode-step backend"
+        from repro.kernels.paged_attention import paged_decode_attention
+        c_pool = paged.write(cache["c_kv"], c_kv[:, 0], pos)
+        pe_pool = paged.write(cache["k_pe"], k_pe[:, 0], pos)
+        w_uk = p["w_uk"].reshape(r_kv, h, dn)
+        q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                           w_uk.astype(jnp.float32))          # (B, H, r_kv)
+        ctx = paged_decode_attention(
+            q_lat, c_pool[:, :, None], c_pool[:, :, None],
+            paged.table, pos + 1,
+            q_pe[:, 0].astype(jnp.float32), pe_pool[:, :, None],
+            scale=(dn + dr) ** -0.5, interpret=paged.interpret)
+        w_uv = p["w_uv"].reshape(r_kv, h, dv)
+        out = jnp.einsum("bhr,rhv->bhv", ctx,
+                         w_uv.astype(jnp.float32))[:, None]   # (B, 1, H, dv)
+        y = out.reshape(b, s, h * dv).astype(x.dtype) @ p["wo"]
+        return y, {"c_kv": c_pool, "k_pe": pe_pool}
 
     if decode:
         c_cache = jax.lax.dynamic_update_slice(

@@ -81,8 +81,15 @@ def block_init(kind: str, cfg, key, dtype) -> dict:
 
 
 def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
-                cache=None, pos=None, prefix_len: int = 0, enc_out=None):
-    """-> (x, new_cache, aux_loss)."""
+                cache=None, pos=None, prefix_len: int = 0, enc_out=None,
+                paged=None):
+    """-> (x, new_cache, aux_loss).
+
+    ``paged`` (an ``attention.PagedContext``) is only passed on decode
+    steps of the ``pallas_paged`` backend, and only for blocks whose cache
+    leaves are page pools; lane-backed blocks receive ``paged=None`` and
+    run the gathered reference path.
+    """
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
 
@@ -95,13 +102,14 @@ def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
         y, new_cache = rglru_mod.rglru_apply(p["mixer"], h, cfg,
                                              cache=cache, pos=pos)
     elif kind in MLA_KINDS:
-        y, new_cache = attn.mla_apply(p["attn"], h, cfg, cache=cache, pos=pos)
+        y, new_cache = attn.mla_apply(p["attn"], h, cfg, cache=cache,
+                                      pos=pos, paged=paged)
     else:
         self_cache = cache.get("self") if isinstance(cache, dict) and \
             "self" in (cache or {}) else cache
         y, new_self = attn.attn_apply(
             p["attn"], h, cfg, kind=_attn_kind(kind), cache=self_cache,
-            pos=pos, prefix_len=prefix_len)
+            pos=pos, prefix_len=prefix_len, paged=paged)
         new_cache = new_self
     if cfg.post_norms:
         y = rms_norm(p["post_ln1"], y, cfg.norm_eps)
@@ -400,6 +408,84 @@ def decode_step(cfg, params, cache, tokens, pos):
     for kind, p, c in zip(cfg.suffix_kinds, params["suffix"],
                           cache["suffix"]):
         x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
+        new_cache["suffix"].append(nc)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _unembed(cfg, params, x), new_cache
+
+
+def decode_step_paged(cfg, params, cache, table, tokens, poss, *,
+                      paged_flags: tuple, page_size: int,
+                      interpret: bool = False):
+    """One decode step for *every* slot straight over the paged KV pools.
+
+    The ``pallas_paged`` attention backend: ``cache`` has the same tree
+    structure as :func:`init_cache_specs` but each pageable leaf is the
+    *physical page pool* shared by all slots (``(n_pages, page, ...)``;
+    scan-stacked leaves keep their leading repeats axis) and each
+    non-pageable leaf is a batched per-slot lane (``(n_slots, ...)``).
+    ``table`` ``(S, P)`` maps logical to physical pages per slot and
+    ``poss`` ``(S,)`` carries per-slot positions; ``tokens`` is ``(S, 1)``.
+
+    ``paged_flags`` is the flat per-leaf pageability mask from
+    ``models.api.cache_layout`` (static — it picks the kernel vs lane path
+    per block at trace time).  Unlike :func:`decode_step`, which the
+    scheduler vmaps over gathered per-slot views, this runs all slots in
+    one batched trace so the attention kernel can walk the shared pool —
+    there is no per-step gather/scatter of the cache anywhere in the step.
+
+    Returns ``(logits (S, 1, V), new cache tree)`` with the pool leaves
+    updated in place (donation-friendly: every output leaf has its input
+    leaf's shape and dtype).
+    """
+    specs = init_cache_specs(cfg, 1, page_size)
+    flags = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(specs), list(paged_flags))
+    ctx = attn.PagedContext(table=table, page_size=page_size,
+                            interpret=interpret)
+
+    def block_ctx(f):
+        leaves = jax.tree_util.tree_leaves(f)
+        assert all(leaves) or not any(leaves), \
+            "mixed paged/lane cache leaves within one block"
+        return ctx if leaves and all(leaves) else None
+
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = constrain(x, "batch", None, None)
+    new_cache = {"prefix": [], "suffix": []}
+
+    for kind, p, c, f in zip(cfg.prefix_kinds, params["prefix"],
+                             cache["prefix"], flags["prefix"]):
+        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=poss,
+                               paged=block_ctx(f))
+        new_cache["prefix"].append(nc)
+
+    if cfg.scan_repeats:
+        pgs = [block_ctx(flags["scan"][f"b{i}"])
+               for i in range(len(cfg.scan_pattern))]
+
+        def body(x, xs):
+            layer_params, layer_cache = xs
+            ncs = {}
+            for i, kind in enumerate(cfg.scan_pattern):
+                x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
+                                       cache=layer_cache[f"b{i}"],
+                                       pos=poss, paged=pgs[i])
+                ncs[f"b{i}"] = nc
+            return x, ncs
+
+        x, scan_cache = jax.lax.scan(body, x,
+                                     (params["scan"], cache["scan"]))
+        new_cache["scan"] = scan_cache
+    else:
+        new_cache["scan"] = {}
+
+    for kind, p, c, f in zip(cfg.suffix_kinds, params["suffix"],
+                             cache["suffix"], flags["suffix"]):
+        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=poss,
+                               paged=block_ctx(f))
         new_cache["suffix"].append(nc)
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)

@@ -28,20 +28,30 @@ Compression on BNNs"), module by module:
                        slots, per-slot positions/KV lanes, exact-position
                        prefill on admission (monolithic batch-1 or
                        fixed-size chunks interleaved with decode under a
-                       token budget), one vmapped decode step for all
-                       slots, admit-on-retire.  KV lanes are optionally
-                       backed by demand-allocated fixed-size pages
+                       token budget), one decode step for all slots,
+                       admit-on-retire.  KV lanes are optionally backed
+                       by demand-allocated fixed-size pages
                        (PageAllocator + per-slot page tables) so short
                        requests stop paying long-request memory and the
-                       pool grows without recompiling decode.
-                       mode="wave" reproduces the old wave-granular
-                       scheduling as a slot config; every scheduling
-                       config is token-identical, only latency and
-                       occupancy differ.
+                       pool grows without recompiling decode.  How decode
+                       *reads* those pages is the attention-backend seam
+                       (attn_backend): "gathered" copies each slot's
+                       pages into a contiguous view per step (reference
+                       oracle), "pallas_paged" hands the donated pools +
+                       page tables to kernels.paged_attention, which
+                       walks the table in-kernel — the §IV consume-in-
+                       place principle applied to KV, zero per-step cache
+                       copies.  mode="wave" reproduces the old
+                       wave-granular scheduling as a slot config; every
+                       scheduling config and both backends are
+                       token-identical, only latency, occupancy, and
+                       copy traffic differ.
   metrics              the paper's measured quantities as counters:
                        throughput, slot occupancy, decode-cache hit rate,
                        HBM bytes streamed vs avoided, prefill-chunk
-                       latency / decode stall, KV-page occupancy.
+                       latency / decode stall, KV-page occupancy, and
+                       per-step KV gather/scatter bytes moved vs avoided
+                       (the acceptance signal for the in-kernel backend).
   ===================  ====================================================
 
 The module <-> paper-structure mapping, with the request lifecycle

@@ -23,6 +23,14 @@ token budget bounds.  Page accounting (paged KV pools only):
 ``pages_in_use`` / ``pages_total`` are last-step gauges and
 ``page_occupancy()`` is the mean pool fraction holding live request
 state — the memory short requests stop paying under paged lanes.
+
+Attention-backend accounting: ``kv_gather_bytes`` counts the cache bytes
+the decode hot path copied through the per-step page gather/scatter
+(the ``gathered`` backend's two full view copies per step) and
+``kv_gather_bytes_avoided`` the bytes the in-kernel ``pallas_paged``
+backend did *not* copy.  A paged-kernel run must report
+``kv_gather_bytes == 0`` — that zero is the acceptance criterion for
+killing the per-step page gather, and tests assert it.
 """
 
 from __future__ import annotations
@@ -58,6 +66,14 @@ class ServeMetrics:
     pages_total: int = 0               # last observed decode step)
     page_use_steps: int = 0            # sum over steps of pages_in_use
     page_capacity_steps: int = 0       # sum over steps of pages_total
+    kv_gather_bytes: int = 0           # per-step KV page gather/scatter
+    #                                    copies on the decode hot path
+    #                                    (gathered backend; 0 under
+    #                                    pallas_paged — the acceptance
+    #                                    signal that the kernel backend
+    #                                    truly killed the copies)
+    kv_gather_bytes_avoided: int = 0   # copies the pallas_paged backend
+    #                                    skipped vs the gathered oracle
     _t0: float = dataclasses.field(default_factory=time.monotonic)
 
     # -- recording ---------------------------------------------------------
@@ -91,6 +107,15 @@ class ServeMetrics:
         self.pages_total = total
         self.page_use_steps += in_use
         self.page_capacity_steps += total
+
+    def record_kv_gather(self, moved: int, avoided: int) -> None:
+        """KV cache bytes copied by this decode step's page
+        gather/scatter (``moved``; the gathered backend's two full cache
+        copies) and bytes those copies *would* have been under the
+        gathered oracle but were not (``avoided``; the pallas_paged
+        backend, whose kernel walks the page table in place)."""
+        self.kv_gather_bytes += moved
+        self.kv_gather_bytes_avoided += avoided
 
     def record_decode_step(self, n_tokens: int, dt: float,
                            n_slots: int = 0) -> None:
@@ -146,6 +171,10 @@ class ServeMetrics:
         if self.pages_total:
             parts.append(f"pages {self.pages_in_use}/{self.pages_total} "
                          f"({self.page_occupancy() * 100:.0f}% mean)")
+        if self.kv_gather_bytes or self.kv_gather_bytes_avoided:
+            parts.append(
+                f"kv gather {_fmt_bytes(self.kv_gather_bytes)} "
+                f"(avoided {_fmt_bytes(self.kv_gather_bytes_avoided)})")
         if cache is not None:
             parts.append(f"cache hit-rate {cache.hit_rate() * 100:.1f}%")
             parts.append(f"streamed {_fmt_bytes(cache.bytes_streamed)}, "

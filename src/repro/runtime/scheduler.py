@@ -66,6 +66,7 @@ served from the decode cache and the memoised device arrays are reused.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable
 
@@ -73,7 +74,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import get_model, supports_chunked_prefill
+from repro.models.api import (ATTN_BACKENDS, cache_layout, get_model,
+                              supports_chunked_prefill,
+                              supports_paged_attention)
 from repro.runtime import weight_store as ws_mod
 from repro.runtime.decode_cache import DecodeTileCache, EvictionPolicy
 from repro.runtime.metrics import ServeMetrics
@@ -227,11 +230,39 @@ class ServeEngine:
                 lambda p, c, t, q: self.api.prefill_chunk(self.cfg, p, c,
                                                           t, q),
                 donate_argnums=(1,))
+        # pallas_paged backend: one compiled paged decode per cache layout
+        # (the pools are donated; the Pallas kernel runs interpreted on
+        # hosts without a TPU, compiled on TPU)
+        self.kernel_interpret = jax.default_backend() != "tpu"
+        self._paged_jits: dict = {}
 
     @property
     def supports_chunked_prefill(self) -> bool:
         return self._chunk_jit is not None and \
             supports_chunked_prefill(self.cfg)
+
+    @property
+    def supports_paged_attention(self) -> bool:
+        return self.api.decode_step_paged is not None and \
+            supports_paged_attention(self.cfg)
+
+    def paged_slot_decode(self, params, kcache, table, toks, poss, *,
+                          paged_flags: tuple, page_size: int):
+        """One decode step for every slot straight over the paged pools:
+        toks (S, 1) int32, poss (S,) int32 -> (logits (S, 1, V), new
+        cache tree).  ``kcache`` is donated — the page-pool update happens
+        in place, with no per-step gather/scatter anywhere."""
+        key = (paged_flags, page_size)
+        fn = self._paged_jits.get(key)
+        if fn is None:
+            step = functools.partial(
+                self.api.decode_step_paged, self.cfg,
+                paged_flags=paged_flags, page_size=page_size,
+                interpret=self.kernel_interpret)
+            fn = jax.jit(lambda p, c, t, tok, pos: step(p, c, t, tok, pos),
+                         donate_argnums=(1,))
+            self._paged_jits[key] = fn
+        return fn(params, kcache, table, toks, poss)
 
     def step_params(self):
         """Per-step serving params (tile-cache-served when compressed)."""
@@ -337,16 +368,36 @@ class SlotPool:
     the KV update happens in place.
 
     ``page_size=N``: length-scaling cache leaves are re-backed by a pool
-    of fixed-size pages (leaves ``(n_pages, page_size, ...)``) plus a
-    per-slot page table; decode gathers each lane's pages into the same
-    contiguous view the monolithic path uses (so the compiled decode step
-    is identical), and scatters the updated pages back.  Pages are
-    allocated on demand as a slot's position crosses page boundaries and
-    released at retire; leaves whose length does not scale with
-    ``slot_len`` (rolling-window KV, recurrent states, cross-attention)
-    stay per-slot lanes.  Page 0 is a shared dummy sink: unallocated table
-    entries point at it, free lanes write into it, and attention's
-    absolute-position masks guarantee it is never read as a valid key.
+    of fixed-size pages plus a per-slot page table.  How decode consumes
+    that pool is the **attention-backend seam** (``backend``):
+
+      * ``"gathered"`` — decode gathers each lane's pages into the same
+        contiguous view the monolithic path uses (so the compiled decode
+        step is identical) and scatters the updated pages back: two full
+        cache copies per step, kept as the reference oracle;
+      * ``"pallas_paged"`` — the pools are stored in the kernel-consumable
+        layout (each pageable leaf's length axis becomes ``(n_pages,
+        page)`` in place, the batch axis is dropped; lane leaves batch the
+        slot axis in place of batch) and the donated tree is handed to
+        ``decode_step_paged`` together with the page table: the Pallas
+        kernel walks the table in-kernel and the per-step
+        ``_gather``/``_scatter_pages`` copies disappear entirely.  The
+        gather/scatter machinery survives only for admission (installing a
+        prefilled batch-1 cache into the pool) and the fallback backend.
+
+    Pages are allocated on demand as a slot's position crosses page
+    boundaries and released at retire; leaves whose length does not scale
+    with ``slot_len`` (rolling-window KV, recurrent states,
+    cross-attention) stay per-slot lanes under both backends.  Page 0 is a
+    shared dummy sink: unallocated table entries point at it, free lanes
+    write into it, and attention's absolute-position masks guarantee it is
+    never read as a valid key.
+
+    ``page_capacity`` (default ``n_pages``) sizes the *physical buffers*;
+    ``grow_pages`` up to the capacity is pure free-list bookkeeping — no
+    buffer realloc, no re-trace, and (crucially, under ``pallas_paged``,
+    whose compiled decode is keyed on the pool shape) no decode recompile.
+    Growth beyond capacity reallocates with geometric headroom.
 
     Free lanes keep decoding (fixed shapes — same cost as the old
     full-wave step) but their output is discarded and their state never
@@ -355,11 +406,19 @@ class SlotPool:
 
     def __init__(self, engine: ServeEngine, n_slots: int, slot_len: int,
                  *, page_size: int | None = None,
-                 n_pages: int | None = None):
+                 n_pages: int | None = None,
+                 backend: str = "gathered",
+                 page_capacity: int | None = None):
+        if backend not in ATTN_BACKENDS:
+            raise ValueError(f"unknown attention backend {backend!r}")
         self.engine = engine
         self.n_slots = n_slots
         self.page_size = page_size
         self.paged = page_size is not None
+        self.backend = backend
+        if backend == "pallas_paged" and not self.paged:
+            raise ValueError("the pallas_paged backend needs paged KV "
+                             "lanes; set a page_size")
         if self.paged:
             if page_size <= 0:
                 raise ValueError(f"page_size must be positive: {page_size}")
@@ -375,30 +434,21 @@ class SlotPool:
                 lambda pool, new, i: jax.tree_util.tree_map(
                     lambda p, n: p.at[i].set(n.astype(p.dtype)), pool, new),
                 donate_argnums=(0,))
+            self.gather_bytes_per_step = 0
+            self.gather_bytes_avoided_per_step = 0
             return
         # -- paged layout ---------------------------------------------------
         # A leaf is paged iff its shape scales 1:1 with slot_len (full-length
         # KV); rolling-window, recurrent-state, and encoder-length leaves
-        # keep per-slot lanes.  Classification probes the spec factory at
-        # two lengths instead of guessing from shapes; the length axis is
-        # wherever the shapes diverge (scan-stacked leaves carry a leading
-        # repeats dim, e.g. (R, 1, L, KH, HD)), and one physical page holds
-        # ``page_size`` token positions *across* the leading dims (a
-        # cross-layer slab).
+        # keep per-slot lanes.  ``models.api.cache_layout`` probes the spec
+        # factory instead of guessing from shapes (scan-stacked leaves carry
+        # a leading repeats dim, e.g. (R, 1, L, KH, HD)) — the same probe
+        # the paged decode step interprets the tree with, so the scheduler
+        # and the model cannot disagree about which leaves page.
         leaves_a, self._treedef = jax.tree_util.tree_flatten(specs)
-        leaves_b = jax.tree_util.tree_flatten(
-            engine.api.init_cache_specs(engine.cfg, 1, 2 * slot_len))[0]
-        self._paged_axis: list[int | None] = []
-        for sa, sb in zip(leaves_a, leaves_b):
-            if sa.shape == sb.shape:
-                self._paged_axis.append(None)
-                continue
-            diff = [i for i, (a, b) in enumerate(zip(sa.shape, sb.shape))
-                    if a != b]
-            assert len(sa.shape) == len(sb.shape) and diff == [diff[0]] and \
-                sa.shape[diff[0]] == slot_len and \
-                sb.shape[diff[0]] == 2 * slot_len, (sa.shape, sb.shape)
-            self._paged_axis.append(diff[0])
+        self._batch_axis, self._paged_axis = cache_layout(
+            engine.api, engine.cfg, slot_len)
+        self.paged_flags = tuple(ax is not None for ax in self._paged_axis)
         if n_pages is None:
             n_pages = n_slots * self.pages_per_slot + 1   # +1: dummy sink
         if n_pages < self.pages_per_slot + 1:
@@ -406,10 +456,44 @@ class SlotPool:
                 f"n_pages {n_pages} cannot back even one full slot "
                 f"({self.pages_per_slot} pages + dummy)")
         self.n_pages = n_pages
+        self.page_capacity = max(page_capacity or 0, n_pages)
         self.allocator = PageAllocator(range(1, n_pages))   # 0 = dummy
         self.table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        # per-step copy accounting: the gathered backend moves every paged
+        # leaf's per-slot view twice per step (pool -> view, view -> pool);
+        # the kernel backend moves none of it
+        view_bytes = 2 * n_slots * sum(
+            int(np.prod(sa.shape)) * sa.dtype.itemsize
+            for sa, ax in zip(leaves_a, self._paged_axis) if ax is not None)
+        cap = self.page_capacity
+        if backend == "pallas_paged":
+            self.gather_bytes_per_step = 0
+            self.gather_bytes_avoided_per_step = view_bytes
+            # kernel-consumable layout: length axis -> (n_pages, page) in
+            # place with the batch-1 axis dropped; lane leaves carry the
+            # slot axis where batch sat, so the paged decode runs all
+            # slots in one batched trace
+            kleaves = []
+            for sa, ax, bax in zip(leaves_a, self._paged_axis,
+                                   self._batch_axis):
+                if ax is not None:
+                    assert bax == ax - 1 and sa.shape[bax] == 1, \
+                        (sa.shape, ax, bax)
+                    kleaves.append(jnp.zeros(
+                        (*sa.shape[:ax - 1], cap, page_size,
+                         *sa.shape[ax + 1:]), sa.dtype))
+                else:
+                    kleaves.append(jnp.zeros(
+                        (*sa.shape[:bax], n_slots, *sa.shape[bax + 1:]),
+                        sa.dtype))
+            self.kcache = jax.tree_util.tree_unflatten(self._treedef,
+                                                       kleaves)
+            self._build_kernel_jits()
+            return
+        self.gather_bytes_per_step = view_bytes
+        self.gather_bytes_avoided_per_step = 0
         self.pages = [
-            jnp.zeros((n_pages, *sa.shape[:ax], page_size,
+            jnp.zeros((cap, *sa.shape[:ax], page_size,
                        *sa.shape[ax + 1:]), sa.dtype)
             for sa, ax in zip(leaves_a, self._paged_axis) if ax is not None]
         self.unpaged = [
@@ -472,11 +556,40 @@ class SlotPool:
                     out_unpaged.append(pool.at[i].set(leaf.astype(pool.dtype)))
             return out_pages, out_unpaged
 
-        # growing n_pages re-traces only these (decode compiles are keyed on
-        # the gathered view, whose shape is n_pages-independent)
+        # growing past page_capacity re-traces only these (decode compiles
+        # are keyed on the gathered view, whose shape is pool-independent)
         self._gather = jax.jit(gather)
         self._scatter_pages = jax.jit(scatter, donate_argnums=(0,))
         self._lane_scatter = jax.jit(lane_scatter, donate_argnums=(0, 1))
+
+    def _build_kernel_jits(self) -> None:
+        """Admission-path scatter for the ``pallas_paged`` layout: write a
+        freshly prefilled batch-1 cache into the slot's pages and lane.
+        This is the only gather/scatter that survives under the kernel
+        backend — the decode hot path touches the pools in place."""
+        len_axes, batch_axes = self._paged_axis, self._batch_axis
+        pps, page, treedef = self.pages_per_slot, self.page_size, \
+            self._treedef
+
+        def install(kcache, cache1, row, i):
+            leaves = jax.tree_util.tree_flatten(kcache)[0]
+            fresh = jax.tree_util.tree_flatten(cache1)[0]
+            out = []
+            for leaf, src, ax, bax in zip(leaves, fresh, len_axes,
+                                          batch_axes):
+                if ax is not None:
+                    # (*lead, 1, L, *rest) -> (*lead, P, page, *rest),
+                    # scattered to this slot's physical pages
+                    v = src.reshape(*src.shape[:ax - 1], pps, page,
+                                    *src.shape[ax + 1:])
+                    idx = (slice(None),) * (ax - 1) + (row,)
+                else:
+                    v = jnp.squeeze(src, axis=bax)
+                    idx = (slice(None),) * bax + (i,)
+                out.append(leaf.at[idx].set(v.astype(leaf.dtype)))
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        self._kernel_install = jax.jit(install, donate_argnums=(0,))
 
     # -- page bookkeeping ---------------------------------------------------
     def pages_needed(self, cache_len: int) -> int:
@@ -496,19 +609,44 @@ class SlotPool:
                 assert slot.reserved_left >= 0
 
     def grow_pages(self, n_pages: int) -> None:
-        """Grow the physical page pool to ``n_pages`` without touching the
-        compiled decode step (only the gather/scatter jits re-trace)."""
+        """Grow the logical page pool to ``n_pages`` without touching the
+        compiled decode step.
+
+        Growth within ``page_capacity`` is pure free-list bookkeeping — no
+        buffer realloc and no re-trace under either backend (the kernel
+        backend's compiled decode is keyed on the physical pool shape, so
+        capacity headroom is what keeps it stable).  Growth beyond
+        capacity reallocates the buffers with geometric headroom; the
+        gathered backend then re-traces only its gather/scatter jits,
+        while the kernel backend recompiles its decode once per
+        capacity doubling."""
         assert self.paged, "grow_pages on a monolithic pool"
         if n_pages <= self.n_pages:
             return
-        extra = n_pages - self.n_pages
-        self.pages = [
-            jnp.concatenate(
-                [p, jnp.zeros((extra, *p.shape[1:]), p.dtype)])
-            for p in self.pages]
+        if n_pages > self.page_capacity:
+            new_cap = max(n_pages, 2 * self.page_capacity)
+            extra = new_cap - self.page_capacity
+            if self.backend == "pallas_paged":
+                kleaves = jax.tree_util.tree_flatten(self.kcache)[0]
+                out = []
+                for leaf, ax in zip(kleaves, self._paged_axis):
+                    if ax is not None:
+                        pad = jnp.zeros((*leaf.shape[:ax - 1], extra,
+                                         *leaf.shape[ax:]), leaf.dtype)
+                        leaf = jnp.concatenate([leaf, pad], axis=ax - 1)
+                    out.append(leaf)
+                self.kcache = jax.tree_util.tree_unflatten(self._treedef,
+                                                           out)
+            else:
+                self.pages = [
+                    jnp.concatenate(
+                        [p, jnp.zeros((extra, *p.shape[1:]), p.dtype)])
+                    for p in self.pages]
+            self.page_capacity = new_cap
+            if self.backend != "pallas_paged":
+                self._build_page_jits()
         self.allocator.add_pages(range(self.n_pages, n_pages))
         self.n_pages = n_pages
-        self._build_page_jits()
 
     # -- slot queries ---------------------------------------------------
     def free(self) -> list[Slot]:
@@ -544,9 +682,13 @@ class SlotPool:
         if self.paged:
             self._ensure_pages(slot, max(end - 1, 0))
             row = jnp.asarray(self.table[slot.index])
-            self.pages, self.unpaged = self._lane_scatter(
-                self.pages, self.unpaged, cache1, row,
-                jnp.int32(slot.index))
+            if self.backend == "pallas_paged":
+                self.kcache = self._kernel_install(
+                    self.kcache, cache1, row, jnp.int32(slot.index))
+            else:
+                self.pages, self.unpaged = self._lane_scatter(
+                    self.pages, self.unpaged, cache1, row,
+                    jnp.int32(slot.index))
         else:
             self.cache = self._scatter(self.cache, cache1,
                                        jnp.int32(slot.index))
@@ -570,8 +712,13 @@ class SlotPool:
 
     # -- decode -------------------------------------------------------------
     def decode(self, params) -> list[tuple[Slot, int, bool]]:
-        """One vmapped decode step -> per active slot (slot, next token,
-        logits_finite); advances each active slot's (tok, pos)."""
+        """One decode step for every slot -> per active slot (slot, next
+        token, logits_finite); advances each active slot's (tok, pos).
+
+        Backend seam: ``gathered`` gathers pages into contiguous views,
+        runs the vmapped per-slot decode, and scatters the pages back;
+        ``pallas_paged`` hands the donated pools + page table straight to
+        the paged decode step — zero per-step cache copies."""
         active = self.active()
         toks = np.zeros((self.n_slots, 1, 1), np.int32)
         poss = np.zeros(self.n_slots, np.int32)
@@ -580,17 +727,25 @@ class SlotPool:
             poss[s.index] = s.pos
             if self.paged:
                 self._ensure_pages(s, s.pos)   # page for this step's write
-        if self.paged:
+        if self.backend == "pallas_paged":
+            table = jnp.asarray(self.table)
+            logits, self.kcache = self.engine.paged_slot_decode(
+                params, self.kcache, table, jnp.asarray(toks[:, :, 0]),
+                jnp.asarray(poss), paged_flags=self.paged_flags,
+                page_size=self.page_size)
+            last = logits[:, -1]                          # (S, V)
+        elif self.paged:
             table = jnp.asarray(self.table)
             views = self._gather(self.pages, self.unpaged, table)
             logits, new_tree = self.engine.slot_decode(
                 params, views, jnp.asarray(toks), jnp.asarray(poss))
             self.pages, self.unpaged = self._scatter_pages(
                 self.pages, new_tree, table)
+            last = logits[:, 0, -1]                       # (S, V)
         else:
             logits, self.cache = self.engine.slot_decode(
                 params, self.cache, jnp.asarray(toks), jnp.asarray(poss))
-        last = logits[:, 0, -1]                           # (S, V)
+            last = logits[:, 0, -1]                       # (S, V)
         nxt = np.asarray(jnp.argmax(last, axis=-1)).astype(np.int32)
         finite = np.asarray(jnp.isfinite(last).all(axis=-1))
         out = []
@@ -616,7 +771,16 @@ class Scheduler:
     interleaved with decode steps; ``prefill_budget`` caps prefill tokens
     per scheduler iteration (default: one chunk).  ``kv_page_size=N``
     backs the KV lanes with N-token pages (``kv_pages`` overrides the
-    physical pool size; default fully backs every slot).
+    logical pool size; default fully backs every slot;
+    ``kv_page_capacity`` pre-sizes the physical buffers so ``grow_pages``
+    up to it never recompiles decode).
+
+    ``attn_backend`` picks how decode reads the paged KV: ``"gathered"``
+    (default — copy pages into contiguous per-slot views each step, the
+    reference oracle) or ``"pallas_paged"`` (the in-kernel paged-attention
+    backend: requires ``kv_page_size``; archs without attention-style
+    caches fall back to ``gathered`` with a note, like the chunked-prefill
+    fallback).  Both backends are token-identical by test.
     """
 
     def __init__(self, engine: ServeEngine, *, batch_size: int = 4,
@@ -626,12 +790,20 @@ class Scheduler:
                  prefill_budget: int | None = None,
                  kv_page_size: int | None = None,
                  kv_pages: int | None = None,
+                 kv_page_capacity: int | None = None,
+                 attn_backend: str = "gathered",
                  log_every: int = 0, emit: Callable[[str], None] = print):
         if mode not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduling mode {mode!r}")
         if prefill_chunk is not None and prefill_chunk <= 0:
             raise ValueError(f"prefill_chunk must be positive: "
                              f"{prefill_chunk}")
+        if attn_backend not in ATTN_BACKENDS:
+            raise ValueError(f"unknown attention backend {attn_backend!r}; "
+                             f"choose from {ATTN_BACKENDS}")
+        if attn_backend == "pallas_paged" and kv_page_size is None:
+            raise ValueError("attn_backend='pallas_paged' needs paged KV "
+                             "lanes; set kv_page_size")
         self.engine = engine
         self.batch_size = batch_size
         self.buckets = tuple(sorted(buckets))
@@ -641,6 +813,8 @@ class Scheduler:
         self.prefill_budget = prefill_budget or prefill_chunk
         self.kv_page_size = kv_page_size
         self.kv_pages = kv_pages
+        self.kv_page_capacity = kv_page_capacity
+        self.attn_backend = attn_backend
         self.log_every = log_every
         self.emit = emit
         self._queue: list[Request] = []
@@ -651,6 +825,11 @@ class Scheduler:
             self.prefill_chunk = None
             emit(f"note: {engine.cfg.family} arch cannot resume a prompt "
                  "mid-cache; falling back to monolithic prefill")
+        if attn_backend == "pallas_paged" and \
+                not engine.supports_paged_attention:
+            self.attn_backend = "gathered"
+            emit(f"note: {engine.cfg.family} arch has no paged decode "
+                 "attention; falling back to the gathered backend")
 
     # -- admission ---------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int) -> Request:
@@ -699,7 +878,9 @@ class Scheduler:
                            else 0)
             self._pool = SlotPool(eng, self.batch_size, slot_len,
                                   page_size=self.kv_page_size,
-                                  n_pages=self.kv_pages)
+                                  n_pages=self.kv_pages,
+                                  backend=self.attn_backend,
+                                  page_capacity=self.kv_page_capacity)
         return self._pool
 
     # -- serving -----------------------------------------------------------
@@ -854,5 +1035,7 @@ class Scheduler:
                              n_slots=pool.n_slots)
         m.record_pages(pool.pages_in_use(),
                        pool.allocator.total if pool.paged else 0)
+        m.record_kv_gather(pool.gather_bytes_per_step,
+                          pool.gather_bytes_avoided_per_step)
         if self.log_every and m.decode_steps % self.log_every == 0:
             self.emit(self.engine.stats_line())

@@ -12,6 +12,8 @@ from repro.kernels import ops, ref
 from repro.kernels.huffman_decode import pack_bitplane_tables
 from tests.conftest import skewed_sequences
 
+pytestmark = pytest.mark.pallas   # CI kernels-interpret job runs these
+
 
 class TestBinaryContraction:
     @pytest.mark.parametrize("m,n,k", [

@@ -1,0 +1,297 @@
+"""The attention-backend seam: ``pallas_paged`` in-kernel decode attention
+must be token-identical to the ``gathered`` reference across archs
+(plain GQA / rolling-window gemma2 / MLA deepseek), page sizes
+(1, 4, odd), chunked prefill, wave mode, and mid-decode pool growth —
+and the kernel itself must match ``attention.decode_attention`` on random
+page tables including the page-0 dummy sink.  The kernel backend's hot
+loop must also move zero gather/scatter bytes (the acceptance metric for
+killing the per-step page copies)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.models.api import get_model, supports_paged_attention
+from repro.models.attention import decode_attention
+from repro.runtime import Scheduler, ServeEngine
+from tests.test_models import reduced
+
+pytestmark = pytest.mark.pallas   # CI kernels-interpret job runs these
+
+
+# ---------------------------------------------------------------------------
+# kernel unit tests vs the decode_attention oracle
+# ---------------------------------------------------------------------------
+
+def random_paged_cache(rng, s, kh, d, dv, page, pages_per_slot,
+                       n_pages=None):
+    """Random pools + a shuffled page table whose tail rows point at the
+    page-0 dummy sink (exactly the scheduler's layout contract)."""
+    lengths = rng.integers(1, pages_per_slot * page + 1, s).astype(np.int32)
+    need = int(sum(-(-int(ln) // page) for ln in lengths))
+    n_pages = n_pages or need + 3                    # spare pages + dummy
+    assert n_pages > need
+    k_pages = rng.standard_normal((n_pages, page, kh, d)).astype(np.float32)
+    v_pages = rng.standard_normal((n_pages, page, kh, dv)).astype(np.float32)
+    ids = list(range(1, n_pages))
+    rng.shuffle(ids)
+    it = iter(ids)
+    table = np.zeros((s, pages_per_slot), np.int32)  # 0 = dummy sink
+    for i in range(s):
+        for j in range(-(-int(lengths[i]) // page)):
+            table[i, j] = next(it)
+    return k_pages, v_pages, table, lengths
+
+
+def gather_reference(q, k_pages, v_pages, table, lengths, **kw):
+    """The gathered oracle: contiguous per-slot views + decode_attention.
+
+    ``q`` is raw (decode_attention applies the 1/sqrt(d) scale itself; the
+    kernel takes pre-scaled queries — callers scale only the kernel's)."""
+    s, h, d = q.shape
+    page = k_pages.shape[1]
+    kh, dv = k_pages.shape[2], v_pages.shape[-1]
+    smax = table.shape[1] * page
+    k_view = k_pages[table].reshape(s, smax, kh, d)
+    v_view = v_pages[table].reshape(s, smax, kh, dv)
+    return decode_attention(jnp.asarray(q[:, None]), jnp.asarray(k_view),
+                            jnp.asarray(v_view),
+                            jnp.asarray(lengths - 1), **kw)[:, 0]
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("page,pages_per_slot", [(1, 8), (3, 4), (4, 3),
+                                                     (8, 2)])
+    def test_random_tables_incl_dummy_sink(self, page, pages_per_slot):
+        rng = np.random.default_rng(page)
+        s, h, kh, d, dv = 4, 4, 2, 16, 16
+        k_pages, v_pages, table, lengths = random_paged_cache(
+            rng, s, kh, d, dv, page, pages_per_slot)
+        q = rng.standard_normal((s, h, d)).astype(np.float32)
+        out = paged_decode_attention(
+            jnp.asarray(q) * d ** -0.5, jnp.asarray(k_pages),
+            jnp.asarray(v_pages), jnp.asarray(table), jnp.asarray(lengths),
+            interpret=True)
+        want = gather_reference(q, k_pages, v_pages, table, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("window,softcap", [(5, 0.0), (0, 4.0),
+                                                (7, 3.0)])
+    def test_window_and_softcap(self, window, softcap):
+        rng = np.random.default_rng(11)
+        s, h, kh, d = 3, 4, 1, 8
+        k_pages, v_pages, table, lengths = random_paged_cache(
+            rng, s, kh, d, d, 4, 4)
+        q = rng.standard_normal((s, h, d)).astype(np.float32)
+        out = paged_decode_attention(
+            jnp.asarray(q) * d ** -0.5, jnp.asarray(k_pages),
+            jnp.asarray(v_pages), jnp.asarray(table), jnp.asarray(lengths),
+            window=window, softcap_val=softcap, interpret=True)
+        want = gather_reference(q, k_pages, v_pages, table, lengths,
+                                window=window, attn_softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_mla_second_operand(self):
+        """(q, k) + (q2, k2) scoring with a shared post-sum scale — the MLA
+        absorbed-decode form (latent pool doubles as the value pool)."""
+        rng = np.random.default_rng(5)
+        s, h, r, dr, page, pps = 3, 4, 8, 4, 3, 4
+        c_pages, _, table, lengths = random_paged_cache(
+            rng, s, 1, r, r, page, pps)
+        pe_pages = rng.standard_normal(
+            (c_pages.shape[0], page, 1, dr)).astype(np.float32)
+        q1 = rng.standard_normal((s, h, r)).astype(np.float32)
+        q2 = rng.standard_normal((s, h, dr)).astype(np.float32)
+        scale = (r + dr) ** -0.5
+        out = paged_decode_attention(
+            jnp.asarray(q1), jnp.asarray(c_pages), jnp.asarray(c_pages),
+            jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(q2),
+            jnp.asarray(pe_pages), scale=scale, interpret=True)
+        smax = pps * page
+        for i in range(s):
+            c = c_pages[table[i], :, 0].reshape(smax, r)
+            pe = pe_pages[table[i], :, 0].reshape(smax, dr)
+            sc = (q1[i] @ c.T + q2[i] @ pe.T) * scale
+            sc = np.where(np.arange(smax)[None] < lengths[i], sc, -1e30)
+            p = np.asarray(jax.nn.softmax(jnp.asarray(sc), axis=-1))
+            np.testing.assert_allclose(np.asarray(out[i]), p @ c,
+                                       rtol=2e-5, atol=2e-5)
+
+    def test_dummy_sink_never_contaminates(self):
+        """Poisoning the page-0 dummy sink with huge values must not
+        change any output: every position the mask admits has a real
+        page, so the sink is never read as a valid key."""
+        rng = np.random.default_rng(9)
+        s, h, kh, d = 3, 4, 2, 8
+        k_pages, v_pages, table, lengths = random_paged_cache(
+            rng, s, kh, d, d, 4, 4)
+        q = rng.standard_normal((s, h, d)).astype(np.float32)
+
+        def run(kp, vp):
+            return np.asarray(paged_decode_attention(
+                jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+                jnp.asarray(table), jnp.asarray(lengths), interpret=True))
+
+        clean = run(k_pages, v_pages)
+        k_pages[0] = 1e6
+        v_pages[0] = -1e6
+        poisoned = run(k_pages, v_pages)
+        assert np.isfinite(poisoned).all()
+        np.testing.assert_array_equal(clean, poisoned)
+
+
+# ---------------------------------------------------------------------------
+# backend seam: token-identical serving across archs / page sizes
+# ---------------------------------------------------------------------------
+
+def make_engine(arch="minitron-8b", seed=0):
+    cfg = reduced(arch)
+    params = jax.tree_util.tree_map(
+        np.asarray, get_model(cfg).init_params(cfg, jax.random.PRNGKey(seed)))
+    return ServeEngine(cfg, params, compress=True)
+
+
+MIXED = [(5, 7), (12, 2), (20, 5), (6, 9)]
+
+
+def serve(engine, reqs, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("buckets", (32,))
+    sched = Scheduler(engine, **kw)
+    rids = {}
+    for i, r in enumerate(reqs):
+        rids[sched.submit(*r).rid] = i
+    done = sched.run()
+    assert len(done) == len(reqs)
+    return {rids[r.rid]: tuple(r.generated) for r in done}
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return make_engine()
+
+
+@pytest.fixture(scope="module")
+def baseline(engine):
+    rng = np.random.default_rng(7)
+    reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g) for L, g in MIXED]
+    return reqs, serve(engine, reqs)
+
+
+class TestBackendTokenEquivalence:
+    @pytest.mark.parametrize("page", [1, 4, 5])
+    def test_kernel_backend_any_page_size(self, engine, baseline, page):
+        """pallas_paged == gathered for page sizes 1, 4, and odd."""
+        reqs, base = baseline
+        assert serve(engine, reqs, kv_page_size=page,
+                     attn_backend="pallas_paged") == base
+
+    def test_kernel_backend_matches_gathered_paged(self, engine, baseline):
+        """Three-way: monolithic lanes == gathered pages == in-kernel."""
+        reqs, base = baseline
+        assert serve(engine, reqs, kv_page_size=4) == base
+        assert serve(engine, reqs, kv_page_size=4,
+                     attn_backend="pallas_paged") == base
+
+    def test_kernel_backend_with_chunked_prefill(self, engine, baseline):
+        reqs, base = baseline
+        assert serve(engine, reqs, kv_page_size=4, prefill_chunk=3,
+                     attn_backend="pallas_paged") == base
+
+    def test_kernel_backend_wave_mode(self, engine, baseline):
+        reqs, base = baseline
+        assert serve(engine, reqs, kv_page_size=8, mode="wave",
+                     attn_backend="pallas_paged") == base
+
+    @pytest.mark.parametrize("arch", ["gemma2-2b", "deepseek-v2-236b"])
+    def test_rolling_window_and_mla_archs(self, arch):
+        """gemma2: rolling-window lanes run the reference path next to
+        paged global layers in the same step; deepseek: MLA absorbed
+        decode through the kernel's second score operand."""
+        engine = make_engine(arch)
+        rng = np.random.default_rng(3)
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g)
+                for L, g in [(20, 6), (4, 3), (11, 8)]]
+        base = serve(engine, reqs)
+        assert serve(engine, reqs, kv_page_size=4,
+                     attn_backend="pallas_paged") == base
+        assert serve(engine, reqs, kv_page_size=3,
+                     attn_backend="pallas_paged") == base
+
+    def test_requires_page_size(self, engine):
+        with pytest.raises(ValueError, match="kv_page_size"):
+            Scheduler(engine, attn_backend="pallas_paged")
+
+    def test_unknown_backend_rejected(self, engine):
+        with pytest.raises(ValueError, match="backend"):
+            Scheduler(engine, kv_page_size=4, attn_backend="flash3")
+
+    def test_recurrent_arch_falls_back_with_note(self):
+        engine = make_engine("recurrentgemma-2b")
+        assert not supports_paged_attention(engine.cfg)
+        notes = []
+        sched = Scheduler(engine, kv_page_size=4,
+                          attn_backend="pallas_paged", emit=notes.append)
+        assert sched.attn_backend == "gathered"
+        assert any("gathered" in n for n in notes)
+
+
+class TestKernelBackendHotPath:
+    def test_zero_gather_bytes_on_decode_path(self, engine, baseline):
+        """The acceptance metric: under pallas_paged the decode hot loop
+        performs no per-step page gather/scatter copies at all, while the
+        gathered backend moves two full view copies per step."""
+        reqs, base = baseline
+        engine.metrics = type(engine.metrics)()
+        assert serve(engine, reqs, kv_page_size=4,
+                     attn_backend="pallas_paged") == base
+        m = engine.metrics
+        assert m.kv_gather_bytes == 0
+        assert m.kv_gather_bytes_avoided > 0
+        engine.metrics = type(engine.metrics)()
+        serve(engine, reqs, kv_page_size=4)
+        m = engine.metrics
+        assert m.kv_gather_bytes > 0
+        assert m.kv_gather_bytes_avoided == 0
+
+    def test_grow_pages_mid_decode_no_recompile(self, engine):
+        """Growing the logical pool within page_capacity mid-serving must
+        not touch the compiled paged decode step and must keep tokens
+        correct."""
+        rng = np.random.default_rng(2)
+        sched = Scheduler(engine, batch_size=2, buckets=(16,),
+                          kv_page_size=4, kv_pages=5, kv_page_capacity=16,
+                          attn_backend="pallas_paged")
+        prompts = [rng.integers(0, engine.cfg.vocab_size, 8)
+                   for _ in range(3)]
+        sched.submit(prompts[0], 6)
+        out1 = sched.run()
+        assert len(out1) == 1
+        key = (sched._pool.paged_flags, sched._pool.page_size)
+        c0 = engine._paged_jits[key]._cache_size()
+        sched._pool.grow_pages(9)
+        sched.submit(prompts[1], 6)
+        sched.submit(prompts[2], 6)
+        out2 = sched.run()
+        assert len(out2) == 2
+        assert engine._paged_jits[key]._cache_size() == c0
+        assert sched._pool.allocator.n_allocated == 0
+        # identical prompts generate identical tokens before/after growth
+        ref = serve(engine, [(prompts[0], 6)], buckets=(16,))
+        assert tuple(out1[0].generated) == ref[0]
+
+    def test_no_pages_leaked_after_retire(self, engine, baseline):
+        reqs, _ = baseline
+        sched = Scheduler(engine, batch_size=2, buckets=(32,),
+                          kv_page_size=4, attn_backend="pallas_paged")
+        for r in reqs:
+            sched.submit(*r)
+        sched.run()
+        pool = sched._pool
+        assert pool.allocator.n_allocated == 0
+        assert pool.allocator.reserved == 0
+        assert (pool.table == 0).all()
