@@ -38,6 +38,12 @@ Three sections:
    decode-step latency and the per-step KV bytes each backend moved /
    avoided.
 
+6. **Capacity autotune** (``--autotune``): sweep a fine capacity grid
+   over the replayed trace (synthetic, or ``--trace-file``), locate the
+   hit-rate cliff, and print a recommended ``decode_cache`` capacity —
+   the knee: the smallest capacity past the cliff within a small
+   tolerance of the best measured hit rate.
+
 Real traffic traces: ``--trace-file path.jsonl`` replays a recorded
 trace (one JSON object per line: ``arrival_time`` seconds, ``prompt_len``,
 ``decode_len``, ``tenant``) through the same policy sweep the synthetic
@@ -45,10 +51,15 @@ generator uses; tenant popularity for the FrequencyWeighted prior is
 estimated from the trace itself.  A tiny sample lives at
 ``benchmarks/traces/sample.jsonl`` and is replayed by ``--smoke``.
 
+``--seed`` seeds the synthetic trace generators (bursty arrivals and the
+request mixes of the scheduler sections), so replays are reproducible
+run-to-run and distinct seeds give distinct-but-reproducible traffic.
+
 Run:  PYTHONPATH=src python benchmarks/serve_cache.py [--steps 24]
       PYTHONPATH=src python benchmarks/serve_cache.py --trace bursty
       PYTHONPATH=src python benchmarks/serve_cache.py \
           --trace-file benchmarks/traces/sample.jsonl
+      PYTHONPATH=src python benchmarks/serve_cache.py --autotune
       PYTHONPATH=src python benchmarks/serve_cache.py --smoke
 """
 
@@ -238,10 +249,55 @@ def replay(trace: Trace, cache: DecodeTileCache, n_slots: int = 6) -> dict:
     return cache.stats()
 
 
+def autotune_capacity(trace: Trace, policy: str = "freq",
+                      tolerance: float = 0.02) -> int:
+    """Sweep a fine capacity grid over ``trace`` and recommend the
+    hit-rate-cliff knee.
+
+    The cliff is the largest hit-rate jump between consecutive
+    capacities (the paper's §IV working-set threshold appearing at
+    serving time); the knee is the smallest capacity whose hit rate is
+    within ``tolerance`` of the best measured rate — everything past it
+    buys memory, not hits.  Returns the recommended capacity in bytes.
+    """
+    fractions = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4,
+                 0.5, 0.6, 0.75, 0.9, 1.0)
+    total = trace.total_bytes
+    caps, rates = [], []
+    print(f"capacity autotune ({policy} policy, "
+          f"{len(trace.requests)} requests, "
+          f"{total // 1024} KiB tile universe):\n")
+    print(f"{'capacity':>10} {'frac':>5} | {'hit rate':>8}")
+    for frac in fractions:
+        cache = DecodeTileCache(int(total * frac), policy=policy)
+        st = replay(trace, cache)
+        caps.append(int(total * frac))
+        rates.append(st["hit_rate"])
+        print(f"{caps[-1]:>10} {frac:>5.2f} | {rates[-1] * 100:>7.1f}%")
+    best = max(rates)
+    jumps = [rates[i] - rates[i - 1] for i in range(1, len(rates))]
+    cliff = int(np.argmax(jumps)) + 1 if jumps else 0
+    # knee: smallest capacity at/after the cliff whose hit rate is within
+    # tolerance of best; non-monotone replays where nothing past the
+    # cliff qualifies fall back to the best capacity itself, so the
+    # "within tolerance" claim below holds by construction
+    knee = next((i for i in range(cliff, len(rates))
+                 if rates[i] >= best - tolerance),
+                int(np.argmax(rates)))
+    print(f"\ncliff: {caps[cliff]} bytes "
+          f"(+{jumps[cliff - 1] * 100:.1f} pts over the previous "
+          f"capacity)" if jumps else "\nno cliff detected")
+    print(f"recommended decode_cache capacity: {caps[knee]} bytes "
+          f"({fractions[knee]:.2f}x of the decoded universe, "
+          f"hit rate {rates[knee] * 100:.1f}%, within "
+          f"{tolerance * 100:.0f} pts of best {best * 100:.1f}%)")
+    return caps[knee]
+
+
 def trace_replay(smoke: bool, trace: Trace | None = None,
-                 label: str = "bursty") -> None:
+                 label: str = "bursty", seed: int = 0) -> None:
     if trace is None:
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng(seed)
         trace = bursty_trace(rng, n_requests=24 if smoke else 64)
     fractions = SMOKE_FRACTIONS if smoke else TRACE_FRACTIONS
     total = trace.total_bytes
@@ -267,8 +323,9 @@ def trace_replay(smoke: bool, trace: Trace | None = None,
           f"{worst * 100:+.1f} pts")
     # the synthetic replay is fully deterministic (seeded trace, no
     # timing), so the paper-skew claim is a hard invariant CI can
-    # enforce; recorded traces carry no such guarantee and just report
-    if label == "bursty":
+    # enforce on the default seed; recorded traces and alternate seeds
+    # carry no such guarantee and just report
+    if label == "bursty" and seed == 0:
         assert worst >= 0, \
             f"FrequencyWeighted lost to LRU by {-worst * 100:.1f} pts"
 
@@ -290,7 +347,7 @@ def _reduced_lm():
     return cfg, params
 
 
-def prefill_compare(smoke: bool) -> None:
+def prefill_compare(smoke: bool, seed: int = 0) -> None:
     """Mixed long/short prompts: monolithic batch-1 prefill stalls every
     lane for a whole long prompt, chunked prefill interleaves the chunks
     with decode steps (round-robin across prefilling slots), so short
@@ -305,7 +362,7 @@ def prefill_compare(smoke: bool) -> None:
     long_len, short_len = (48, 6) if smoke else (96, 8)
     gen_s, gen_l = (6, 4) if smoke else (16, 8)
     n_pairs = 3 if smoke else 6
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     # long, short, short, long, ... — shorts always queue behind a long
     reqs = []
     for _ in range(n_pairs):
@@ -364,22 +421,27 @@ def prefill_compare(smoke: bool) -> None:
 # attention backends: paged-gather vs in-kernel decode on the real scheduler
 # ---------------------------------------------------------------------------
 
-def backend_compare(smoke: bool) -> None:
-    """Decode-step latency under the two attention backends.
+def backend_compare(smoke: bool, seed: int = 0) -> None:
+    """Decode-step latency under the attention backends + mixed step.
 
     ``gathered`` copies every slot's pages into a contiguous lane view and
     scatters them back *each step* — two full cache copies on the decode
     hot path.  ``pallas_paged`` hands the donated page pool + page tables
     to the paged-attention kernel, which walks the table in-kernel: the
     per-step copies disappear (the kv-gather metric must read exactly 0,
-    asserted here).  Tokens are identical by assertion; on CPU the kernel
-    runs interpreted, so the latency column shows the copy-free data path,
-    not TPU-compiled kernel speed.
+    asserted here).  ``mixed`` adds chunked prefill on top of
+    ``pallas_paged``: prompt chunks and decode tokens ride one ragged
+    batched trace whose K/V writes land straight in the pools, so the
+    *prefill*-side gather (the gathered oracle's install copy of every
+    freshly prefilled cache) reads exactly 0 too — also asserted.  Tokens
+    are identical by assertion; on CPU the kernel runs interpreted, so
+    the latency column shows the copy-free data path, not TPU-compiled
+    kernel speed.
     """
     from repro.runtime import Scheduler, ServeEngine
 
     cfg, params = _reduced_lm()
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     n = 6 if smoke else 12
     reqs = [(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 20))),
              int(rng.integers(4, 12))) for _ in range(n)]
@@ -387,14 +449,18 @@ def backend_compare(smoke: bool) -> None:
     print(f"\nattention backends: {n} requests, batch 2, page size 8, "
           f"reduced minitron-8b")
     print(f"{'backend':>14} | {'ms/step':>8} | {'kv moved/step':>13} | "
-          f"{'kv avoided/step':>15}")
+          f"{'kv avoided/step':>15} | {'prefill moved':>13}")
 
+    configs = {
+        "gathered": dict(attn_backend="gathered"),
+        "pallas_paged": dict(attn_backend="pallas_paged"),
+        "mixed": dict(attn_backend="pallas_paged", prefill_chunk=8),
+    }
     results = {}
-    for backend in ("gathered", "pallas_paged"):
+    for label, kw in configs.items():
         engine = ServeEngine(cfg, params, compress=True)
         sched = Scheduler(engine, batch_size=2, slot_len=slot_len,
-                          buckets=(32,), kv_page_size=8,
-                          attn_backend=backend)
+                          buckets=(32,), kv_page_size=8, **kw)
         sched.submit(reqs[0][0], 2)              # warmup compile
         sched.run()
         engine.metrics = type(engine.metrics)()
@@ -404,33 +470,41 @@ def backend_compare(smoke: bool) -> None:
         assert len(done) == n
         m = engine.metrics
         steps = max(m.decode_steps, 1)
-        results[backend] = (
+        results[label] = (
             m.ms_per_token(), m.kv_gather_bytes, m.kv_gather_bytes_avoided,
             tuple(tuple(r.generated) for r in
-                  sorted(done, key=lambda r: r.rid)[-n:]))
-        print(f"{backend:>14} | {m.ms_per_token():>8.1f} | "
+                  sorted(done, key=lambda r: r.rid)[-n:]),
+            m.kv_prefill_gather_bytes)
+        print(f"{label:>14} | {m.ms_per_token():>8.1f} | "
               f"{m.kv_gather_bytes // steps:>13} | "
-              f"{m.kv_gather_bytes_avoided // steps:>15}")
+              f"{m.kv_gather_bytes_avoided // steps:>15} | "
+              f"{m.kv_prefill_gather_bytes:>13}")
     assert results["gathered"][3] == results["pallas_paged"][3], \
         "attention backend changed generated tokens"
+    assert results["gathered"][3] == results["mixed"][3], \
+        "mixed-step execution changed generated tokens"
     assert results["pallas_paged"][1] == 0, \
         "pallas_paged backend copied KV on the decode hot path"
     assert results["pallas_paged"][2] > 0 and results["gathered"][1] > 0
-    print("  pallas_paged moved 0 gather/scatter bytes "
-          "(token-identical outputs)")
+    assert results["mixed"][1] == 0 and results["mixed"][4] == 0, \
+        "mixed-step path copied KV on the prefill or decode hot path"
+    assert results["gathered"][4] > 0 and results["pallas_paged"][4] > 0, \
+        "install-path prefill copies were not accounted"
+    print("  pallas_paged moved 0 gather/scatter bytes; mixed-step also "
+          "moved 0 prefill install bytes (token-identical outputs)")
 
 
 # ---------------------------------------------------------------------------
 # slot-level continuous batching vs wave mode on the real scheduler
 # ---------------------------------------------------------------------------
 
-def slot_vs_wave(smoke: bool) -> None:
+def slot_vs_wave(smoke: bool, seed: int = 0) -> None:
     from repro.runtime import Scheduler, ServeEngine
 
     cfg, params = _reduced_lm()
     batch = 4
     prompt_len = 8                           # fixed: one prefill compile,
-    rng = np.random.default_rng(0)           # hit by every admission
+    rng = np.random.default_rng(seed)        # hit by every admission
     trace = bursty_trace(rng, n_requests=10 if smoke else 24,
                          gen_lo=2 if smoke else 8,
                          gen_hi=12 if smoke else 48)
@@ -499,8 +573,31 @@ def main():
                     help="small CI run: synthetic + sample-file trace "
                          "replay (all policies), slot-vs-wave, chunked "
                          "prefill, and the attention-backend comparison")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the synthetic trace generators "
+                         "(bursty arrivals + scheduler request mixes), so "
+                         "replays are reproducible run-to-run; the "
+                         "freq-vs-LRU CI invariant is only asserted on "
+                         "the default seed")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep a fine capacity grid over the replayed "
+                         "trace (synthetic bursty, or --trace-file) and "
+                         "print the recommended decode_cache capacity at "
+                         "the hit-rate-cliff knee")
+    ap.add_argument("--autotune-policy", choices=list(POLICY_NAMES),
+                    default="freq",
+                    help="eviction policy the autotune sweep measures")
     args = ap.parse_args()
 
+    if args.autotune:
+        if args.trace_file:
+            trace = load_trace_file(args.trace_file,
+                                    time_step=args.trace_time_step)
+        else:
+            trace = bursty_trace(np.random.default_rng(args.seed),
+                                 n_requests=24 if args.smoke else 64)
+        autotune_capacity(trace, policy=args.autotune_policy)
+        return
     if args.trace_file:
         trace = load_trace_file(args.trace_file,
                                 time_step=args.trace_time_step)
@@ -509,15 +606,15 @@ def main():
         if not (args.trace or args.smoke):
             return
     if args.trace or args.smoke:
-        trace_replay(smoke=args.smoke)
+        trace_replay(smoke=args.smoke, seed=args.seed)
         if args.smoke:
             print()
             trace_replay(smoke=True,
                          trace=load_trace_file(SAMPLE_TRACE),
                          label="sample.jsonl")
-        slot_vs_wave(smoke=args.smoke)
-        prefill_compare(smoke=args.smoke)
-        backend_compare(smoke=args.smoke)
+        slot_vs_wave(smoke=args.smoke, seed=args.seed)
+        prefill_compare(smoke=args.smoke, seed=args.seed)
+        backend_compare(smoke=args.smoke, seed=args.seed)
         return
     capacity_sweep(args.steps)
 

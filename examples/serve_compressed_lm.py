@@ -168,3 +168,20 @@ assert mk.kv_gather_bytes == 0
 print(f"  attn backend pallas_paged == gathered  [OK]  "
       f"(0 KV bytes gathered on the decode path, "
       f"{mk.kv_gather_bytes_avoided} avoided)")
+
+# -- mixed-step: prefill chunks + decode tokens, one paged invocation -------
+# Chunked prefill under pallas_paged collapses the scheduler's two
+# execution paths into one: every iteration, prefilling slots contribute a
+# prompt chunk and active slots a decode token to a single ragged batched
+# trace whose K/V lands straight in the page pools — no standalone prefill
+# cache, no install copy.  Tokens must still match the monolithic
+# configuration, and *both* KV gather counters must read exactly zero.
+mixed_toks, mm = serve_tokens(prefill_chunk=args.prefill_chunk,
+                              kv_page_size=args.kv_page_size,
+                              attn_backend="pallas_paged")
+assert mono_toks == mixed_toks
+assert mm.kv_gather_bytes == 0
+assert mm.kv_prefill_gather_bytes == 0
+print(f"  mixed-step (chunked prefill in-kernel) == monolithic  [OK]  "
+      f"(0 KV bytes gathered on the prefill AND decode paths, "
+      f"{mm.kv_prefill_gather_bytes_avoided} install bytes avoided)")

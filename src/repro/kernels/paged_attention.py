@@ -1,16 +1,27 @@
-"""Pallas TPU kernel: in-kernel paged decode attention.
+"""Pallas TPU kernel: in-kernel paged attention over slot page tables.
 
-Decode attention that consumes the scheduler's paged KV layout *directly*:
-the physical page pool ``(n_pages, page, KH, D)`` plus a per-slot page
-table and per-slot lengths.  Each ``(slot, logical page)`` grid step pulls
-exactly one physical page into VMEM — the BlockSpec index map reads the
-page table through scalar prefetch, so the DMA engine walks the table and
-never touches pages the slot does not own — applies the absolute-position
-mask, and folds the page into an online-softmax accumulator held in VMEM
-scratch.  No contiguous per-slot view of the cache is ever materialised,
-in HBM or anywhere else: this is the serving analogue of the paper's
-in-pipeline decoding unit (§IV), which consumes operands in their at-rest
-layout instead of expanding them into memory first.
+Attention that consumes the scheduler's paged KV layout *directly*: the
+physical page pool ``(n_pages, page, KH, D)`` plus a per-slot page table
+and per-slot lengths.  Each ``(slot, q_block, logical page)`` grid step
+pulls exactly one physical page into VMEM — the BlockSpec index map reads
+the page table through scalar prefetch, so the DMA engine walks the table
+and never touches pages the slot does not own — applies the per-token
+causal/position mask, and folds the page into an online-softmax
+accumulator held in VMEM scratch.  No contiguous per-slot view of the
+cache is ever materialised, in HBM or anywhere else: this is the serving
+analogue of the paper's in-pipeline decoding unit (§IV), which consumes
+operands in their at-rest layout instead of expanding them into memory
+first.
+
+Since the mixed-step generalisation the kernel serves *ragged
+multi-token* queries: slot ``s`` contributes ``q_lens[s]`` consecutive
+tokens (a prefill chunk, or a single decode token) out of a padded
+``(S, Q)`` block, and causality is enforced per query token inside the
+online-softmax loop — token ``i`` of slot ``s`` sits at absolute position
+``lengths[s] - q_lens[s] + i`` and may only attend keys at positions
+``<= `` its own.  Decode is the ``Q == 1`` special case
+(:func:`paged_decode_attention`); prefill chunks and decode tokens of
+different slots ride in the same invocation.
 
 Layout contract (shared with ``runtime.scheduler.SlotPool``):
 
@@ -19,8 +30,13 @@ Layout contract (shared with ``runtime.scheduler.SlotPool``):
     ``< lengths[s]`` has a real page, and everything else is masked);
   * a slot's logical page ``j`` covers absolute positions
     ``[j * page, (j + 1) * page)``;
-  * ``lengths[s]`` = number of valid positions = current position + 1
-    (the current token's K/V is written into the pool *before* the call).
+  * ``lengths[s]`` = number of valid positions *including* this step's
+    tokens (the whole chunk's K/V is written into the pool *before* the
+    call; the per-token causal masks preserve write-after-attend
+    semantics — a query never sees a later chunk token's key);
+  * padded rows/tokens (``i >= q_lens[s]``, including ``q_lens[s] == 0``
+    free lanes) attend nothing and produce finite garbage the caller
+    discards.
 
 The optional second score operand ``(q2, k2_pages)`` serves MLA absorbed
 decode: scores are ``q . k + q2 . k2`` (latent + rope parts) over a
@@ -38,6 +54,7 @@ real TPUs pad heads/pages toward (8, 128) tiles for peak DMA efficiency.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -47,15 +64,16 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, *rest, page: int,
-            kh: int, g: int, window: int, softcap_val: float, scale: float,
-            has_q2: bool):
+def _kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest,
+            page: int, kh: int, g: int, qb: int, window: int,
+            softcap_val: float, scale: float, has_q2: bool):
     if has_q2:
         q2_ref, k2_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
         o_ref, m_ref, l_ref, acc_ref = rest
     s_idx = pl.program_id(0)
-    j = pl.program_id(1)
+    qb_idx = pl.program_id(1)
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
@@ -63,109 +81,159 @@ def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, *rest, page: int,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # ---- one page of scores: (KH, G, page) f32 ---------------------------
-    q = q_ref[0].astype(jnp.float32).reshape(kh, g, q_ref.shape[-1])
+    # ---- one page of scores: (KH, G, qb, page) f32 -----------------------
+    q = q_ref[0].astype(jnp.float32).reshape(qb, kh, g, q_ref.shape[-1])
     k = k_ref[0].astype(jnp.float32)                      # (page, KH, D)
-    s = jnp.einsum("kgd,pkd->kgp", q, k)
+    s = jnp.einsum("qkgd,pkd->kgqp", q, k)
     if has_q2:
-        q2 = q2_ref[0].astype(jnp.float32).reshape(kh, g, q2_ref.shape[-1])
-        s = s + jnp.einsum("kgd,pkd->kgp", q2,
+        q2 = q2_ref[0].astype(jnp.float32).reshape(
+            qb, kh, g, q2_ref.shape[-1])
+        s = s + jnp.einsum("qkgd,pkd->kgqp", q2,
                            k2_ref[0].astype(jnp.float32))
     if scale != 1.0:
         s = s * scale
     if softcap_val:
         s = jnp.tanh(s / softcap_val) * softcap_val
 
-    # ---- absolute-position mask ------------------------------------------
+    # ---- per-token causal/position mask ----------------------------------
+    # query token i of this block sits at absolute position
+    # lengths[s] - q_lens[s] + (qb_idx * qb + i); tokens past q_lens[s]
+    # are ragged padding and attend nothing.
     length = len_ref[s_idx]
-    gpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
-    valid = gpos < length
+    qlen = qlen_ref[s_idx]
+    qi = qb_idx * qb + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, qb, 1), 2)
+    qpos = (length - qlen) + qi
+    gpos = j * page + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, 1, page), 3)
+    valid = (gpos <= qpos) & (qi < qlen)
     if window:
-        valid &= gpos > length - 1 - window
+        valid &= gpos > qpos - window
     s = jnp.where(valid, s, NEG_INF)
 
     # ---- online softmax accumulation across pages ------------------------
-    m_prev = m_ref[...]                                   # (KH, G)
+    m_prev = m_ref[...].reshape(kh, g, qb)
     m_new = jnp.maximum(m_prev, s.max(-1))
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(s - m_new[..., None])
-    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
-    pv = jnp.einsum("kgp,pkv->kgv", p, v_ref[0].astype(jnp.float32))
-    acc_ref[...] = acc_ref[...] * alpha.reshape(kh * g, 1) \
-        + pv.reshape(kh * g, -1)
-    m_ref[...] = m_new
+    l_ref[...] = (l_ref[...].reshape(kh, g, qb) * alpha
+                  + p.sum(-1)).reshape(kh, g * qb)
+    pv = jnp.einsum("kgqp,pkv->kgqv", p, v_ref[0].astype(jnp.float32))
+    acc_ref[...] = acc_ref[...] * alpha.reshape(kh * g * qb, 1) \
+        + pv.reshape(kh * g * qb, -1)
+    m_ref[...] = m_new.reshape(kh, g * qb)
 
-    @pl.when(j == pl.num_programs(1) - 1)
+    @pl.when(j == pl.num_programs(2) - 1)
     def _done():
-        l = jnp.maximum(l_ref[...], 1e-20).reshape(kh * g, 1)
-        o_ref[0] = (acc_ref[...] / l).reshape(o_ref.shape[1:])
+        l = jnp.maximum(l_ref[...].reshape(kh, g, qb), 1e-20)
+        out = acc_ref[...].reshape(kh, g, qb, -1) / l[..., None]
+        o_ref[0] = jnp.moveaxis(out, 2, 0).reshape(o_ref.shape[1:])
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap_val",
-                                             "scale", "interpret"))
-def paged_decode_attention(
-    q: jax.Array,            # (S, H, D)   this step's queries, one per slot
+                                             "scale", "q_block",
+                                             "interpret"))
+def paged_mixed_attention(
+    q: jax.Array,            # (S, Q, H, D)  padded per-slot query blocks
     k_pages: jax.Array,      # (n_pages, page, KH, D)   physical key pool
     v_pages: jax.Array,      # (n_pages, page, KH, Dv)  physical value pool
     table: jax.Array,        # (S, P) int32 physical page per logical page
-    lengths: jax.Array,      # (S,) int32   valid positions per slot
-    q2: jax.Array | None = None,        # (S, H, D2)  MLA rope-part queries
+    lengths: jax.Array,      # (S,) int32 valid positions incl. this block
+    q_lens: jax.Array,       # (S,) int32 real query tokens per slot (<= Q)
+    q2: jax.Array | None = None,        # (S, Q, H, D2) MLA rope-part queries
     k2_pages: jax.Array | None = None,  # (n_pages, page, KH, D2)
     *,
     window: int = 0,
     softcap_val: float = 0.0,
     scale: float = 1.0,
+    q_block: int = 0,        # 0 = whole Q per grid step; non-divisors
+    #                          round down to gcd(Q, q_block), same
+    #                          convention as flash_attention's q_chunk
     interpret: bool = False,
 ) -> jax.Array:
-    """out (S, H, Dv) float32 — per-slot decode attention over paged KV.
+    """out (S, Q, H, Dv) float32 — ragged mixed-step paged attention.
 
-    Numerically equivalent to gathering each slot's pages into a contiguous
-    cache and running ``attention.decode_attention`` (the reference oracle
-    in tests/test_paged_attention.py); the cache copy just never happens.
+    Numerically equivalent to gathering each slot's pages into a
+    contiguous cache and running the gathered reference attention
+    (``attention.decode_attention`` / ``attention.chunk_attention`` — the
+    oracles in tests); the cache copy just never happens.  Rows beyond
+    ``q_lens[s]`` are padding: their output is finite garbage the caller
+    must ignore.
     """
-    s_n, h, d = q.shape
+    s_n, qn, h, d = q.shape
     n_pages, page, kh, dk = k_pages.shape
     dv = v_pages.shape[-1]
     assert dk == d, (dk, d)
     assert h % kh == 0, (h, kh)
     g = h // kh
     pps = table.shape[1]
+    qb = math.gcd(qn, q_block) if q_block else qn
+    nqb = qn // qb
 
     in_specs = [
-        pl.BlockSpec((1, h, d), lambda s, j, t, ln: (s, 0, 0)),
+        pl.BlockSpec((1, qb, h, d), lambda s, qi, j, t, ln, ql: (s, qi, 0, 0)),
         pl.BlockSpec((1, page, kh, d),
-                     lambda s, j, t, ln: (t[s, j], 0, 0, 0)),
+                     lambda s, qi, j, t, ln, ql: (t[s, j], 0, 0, 0)),
         pl.BlockSpec((1, page, kh, dv),
-                     lambda s, j, t, ln: (t[s, j], 0, 0, 0)),
+                     lambda s, qi, j, t, ln, ql: (t[s, j], 0, 0, 0)),
     ]
     args = [q, k_pages, v_pages]
     if q2 is not None:
         d2 = q2.shape[-1]
         in_specs += [
-            pl.BlockSpec((1, h, d2), lambda s, j, t, ln: (s, 0, 0)),
+            pl.BlockSpec((1, qb, h, d2),
+                         lambda s, qi, j, t, ln, ql: (s, qi, 0, 0)),
             pl.BlockSpec((1, page, kh, d2),
-                         lambda s, j, t, ln: (t[s, j], 0, 0, 0)),
+                         lambda s, qi, j, t, ln, ql: (t[s, j], 0, 0, 0)),
         ]
         args += [q2, k2_pages]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(s_n, pps),
+        num_scalar_prefetch=3,
+        grid=(s_n, nqb, pps),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, h, dv), lambda s, j, t, ln: (s, 0, 0)),
+        out_specs=pl.BlockSpec((1, qb, h, dv),
+                               lambda s, qi, j, t, ln, ql: (s, qi, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((kh, g), jnp.float32),     # running max
-            pltpu.VMEM((kh, g), jnp.float32),     # running normaliser
-            pltpu.VMEM((h, dv), jnp.float32),     # output accumulator
+            pltpu.VMEM((kh, g * qb), jnp.float32),    # running max
+            pltpu.VMEM((kh, g * qb), jnp.float32),    # running normaliser
+            pltpu.VMEM((h * qb, dv), jnp.float32),    # output accumulator
         ],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, page=page, kh=kh, g=g, window=window,
-                          softcap_val=softcap_val, scale=scale,
-                          has_q2=q2 is not None),
+        functools.partial(_kernel, page=page, kh=kh, g=g, qb=qb,
+                          window=window, softcap_val=softcap_val,
+                          scale=scale, has_q2=q2 is not None),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((s_n, h, dv), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((s_n, qn, h, dv), jnp.float32),
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary")),
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(table.astype(jnp.int32), lengths.astype(jnp.int32), *args)
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32),
+      jnp.asarray(q_lens, jnp.int32), *args)
+
+
+def paged_decode_attention(
+    q: jax.Array,            # (S, H, D)   this step's queries, one per slot
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    table: jax.Array,
+    lengths: jax.Array,      # (S,) int32   valid positions per slot
+    q2: jax.Array | None = None,
+    k2_pages: jax.Array | None = None,
+    *,
+    window: int = 0,
+    softcap_val: float = 0.0,
+    scale: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """out (S, H, Dv) float32 — single-token decode, the ``Q == 1``
+    special case of :func:`paged_mixed_attention` (each slot's one query
+    sits at position ``lengths[s] - 1``)."""
+    out = paged_mixed_attention(
+        q[:, None], k_pages, v_pages, table, lengths,
+        jnp.ones((q.shape[0],), jnp.int32),
+        None if q2 is None else q2[:, None], k2_pages,
+        window=window, softcap_val=softcap_val, scale=scale,
+        interpret=interpret)
+    return out[:, 0]

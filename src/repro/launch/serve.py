@@ -13,7 +13,11 @@ wave-granular scheduling (token-identical, lower slot occupancy);
 both token-identical to the monolithic defaults.  ``--attn-backend
 pallas_paged`` decodes straight over the page pool with the in-kernel
 paged-attention kernel (zero per-step KV gather/scatter copies; also
-token-identical).
+token-identical).  Combining ``--attn-backend pallas_paged`` with
+``--prefill-chunk`` engages the unified **mixed-step** path: prefill
+chunks and decode tokens of every slot ride one ragged batched trace
+per iteration, chunks write straight into the page pools, and the
+serve summary's KV gather counters read zero for prefill *and* decode.
 
   PYTHONPATH=src python -m repro.launch.serve --scale tiny
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
@@ -60,11 +64,17 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="split prompts into chunks of this many tokens, "
                          "interleaved with decode steps (omit = monolithic "
-                         "batch-1 prefill at admission)")
+                         "batch-1 prefill at admission); with --attn-"
+                         "backend pallas_paged this engages the unified "
+                         "mixed-step path (chunks + decode tokens in one "
+                         "batched trace, zero prefill/decode KV copies)")
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="max prefill tokens per scheduler iteration "
                          "(default: one chunk); bounds decode-latency "
-                         "impact of long prompts")
+                         "impact of long prompts.  On the mixed-step "
+                         "path each prefilling slot advances at most one "
+                         "chunk per iteration, so budget beyond "
+                         "batch * chunk has no additional effect")
     ap.add_argument("--kv-page-size", type=int, default=None,
                     help="back KV lanes with pages of this many tokens, "
                          "allocated on demand (omit = monolithic "
@@ -151,6 +161,10 @@ def main():
         print(f"kv gather ({sched.attn_backend} backend): "
               f"{m.kv_gather_bytes} bytes copied on the decode hot path, "
               f"{m.kv_gather_bytes_avoided} avoided in-kernel")
+        print(f"prefill gather: {m.kv_prefill_gather_bytes} bytes copied "
+              f"installing prefilled caches, "
+              f"{m.kv_prefill_gather_bytes_avoided} avoided by "
+              f"mixed-step in-pool prefill")
     if engine.compressed:
         st = engine.cache.stats()
         print(f"decode-tile cache ({st['policy']}): {st['hits']} hits / "

@@ -25,18 +25,23 @@ class ModelAPI:
     init_cache: Callable[..., Any]
     prefill_chunk: Callable[..., Any] | None = None
     # (cfg, params, cache, tokens (B, S), pos) -> (last logits, new cache);
-    # None when the family cannot resume a prompt mid-cache (encoder-decoder)
-    decode_step_paged: Callable[..., Any] | None = None
-    # (cfg, params, paged cache, table, tokens (S, 1), poss (S,), *,
-    #  paged_flags, page_size, interpret) -> (logits (S, 1, V), new cache);
-    # the in-kernel half of the attention-backend seam — None when the
-    # family cannot consume a paged cache (encoder-decoder)
+    # the gathered oracle's chunk step (standalone batch-1 cache); None
+    # when the family cannot resume a prompt mid-cache (encoder-decoder)
+    mixed_step: Callable[..., Any] | None = None
+    # (cfg, params, paged cache, table, tokens (S, Q), poss (S,),
+    #  q_lens (S,), *, paged_flags, page_size, interpret)
+    #   -> (logits (S, Q, V), new cache);
+    # the in-kernel half of the attention-backend seam: one ragged batched
+    # trace where every slot contributes q_lens[s] tokens — a prefill
+    # chunk, one decode token, or nothing — against the shared page pools
+    # (decode is the Q == 1 special case).  None when the family cannot
+    # consume a paged cache (encoder-decoder)
 
 
 # the attention backends the serving stack can decode with: "gathered"
 # copies each slot's pages into a contiguous lane view per step (the
 # reference oracle), "pallas_paged" hands the page pool + page tables to
-# decode_step_paged, whose Pallas kernel walks the table in-kernel
+# mixed_step, whose Pallas kernel walks the table in-kernel
 ATTN_BACKENDS = ("gathered", "pallas_paged")
 
 # block kinds whose caches can resume a prompt mid-prefill (attention-style
@@ -65,9 +70,9 @@ def supports_chunked_prefill(cfg) -> bool:
 
 
 def supports_paged_attention(cfg) -> bool:
-    """True if ``cfg`` can decode with the ``pallas_paged`` attention
+    """True if ``cfg`` can serve with the ``pallas_paged`` attention
     backend: every block keeps an attention-style cache (pageable or
-    lane-backed) and the family exposes :func:`transformer.decode_step_paged`."""
+    lane-backed) and the family exposes :func:`transformer.mixed_step`."""
     if cfg.family == "audio":
         return False
     kinds = (tuple(cfg.prefix_kinds) + tuple(cfg.scan_pattern)
@@ -90,7 +95,7 @@ def cache_layout(api: "ModelAPI", cfg, slot_len: int):
 
     This probe is the single source of truth for "which leaves are
     pageable, kernel-consumable": the SlotPool uses it to build the page
-    pools and ``decode_step_paged`` receives the pageability mask derived
+    pools and ``mixed_step`` receives the pageability mask derived
     from it, so the two can never disagree about the layout.
     """
     leaves_a = jax.tree_util.tree_leaves(
@@ -129,7 +134,7 @@ def get_model(cfg) -> ModelAPI:
             init_cache_specs=encdec.init_cache_specs,
             init_cache=encdec.init_cache,
             prefill_chunk=None,
-            decode_step_paged=None,
+            mixed_step=None,
         )
     return ModelAPI(
         init_params=transformer.init_params,
@@ -140,5 +145,5 @@ def get_model(cfg) -> ModelAPI:
         init_cache_specs=transformer.init_cache_specs,
         init_cache=transformer.init_cache,
         prefill_chunk=transformer.prefill_chunk,
-        decode_step_paged=transformer.decode_step_paged,
+        mixed_step=transformer.mixed_step,
     )

@@ -40,16 +40,30 @@ class PagedContext:
     page_size: int
     interpret: bool = False
 
-    def write(self, pool: jax.Array, value: jax.Array, pos) -> jax.Array:
-        """Scatter this step's per-slot ``value`` (S, ...) into each
-        slot's current page of ``pool`` (n_pages, page, ...) at position
-        ``pos`` (S,).  This is the layout contract the paged kernel
-        depends on: the current token's K/V is in the pool *before* the
-        kernel walks the table."""
-        pids = self.table[jnp.arange(value.shape[0]),
-                          pos // self.page_size]
-        return pool.at[pids, pos % self.page_size].set(
-            value.astype(pool.dtype))
+    def write(self, pool: jax.Array, values: jax.Array, pos,
+              q_lens=None) -> jax.Array:
+        """Scatter this step's per-slot token block ``values`` (S, Q, ...)
+        into each slot's pages of ``pool`` (n_pages, page, ...): token
+        ``i`` of slot ``s`` lands at absolute position ``pos[s] + i`` for
+        ``i < q_lens[s]``; padded tokens of the ragged mixed-step block
+        (``i >= q_lens[s]``, or everything when ``q_lens[s] == 0``) are
+        routed to the page-0 dummy sink instead.  ``q_lens=None`` means
+        every token is real.  This is the layout contract the paged
+        kernel depends on: the chunk's K/V is in the pool *before* the
+        kernel walks the table (per-token causal masks keep
+        write-after-attend semantics)."""
+        s_n, qn = values.shape[:2]
+        p = jnp.asarray(pos, jnp.int32)[:, None] \
+            + jnp.arange(qn, dtype=jnp.int32)[None]           # (S, Q)
+        lidx = jnp.clip(p // self.page_size, 0, self.table.shape[1] - 1)
+        pids = jnp.take_along_axis(self.table, lidx, axis=1)
+        if q_lens is not None:
+            valid = jnp.arange(qn)[None] < \
+                jnp.asarray(q_lens, jnp.int32)[:, None]
+            pids = jnp.where(valid, pids, 0)
+            p = jnp.where(valid, p, 0)
+        return pool.at[pids, p % self.page_size].set(
+            values.astype(pool.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -226,11 +240,12 @@ def chunk_attention(
     v: jax.Array,            # (B, S, KH, Dv) chunk values
     k_past: jax.Array,       # (B, P, KH, D)  resident cache (physical order)
     v_past: jax.Array,       # (B, P, KH, Dv)
-    q_pos: jax.Array,        # (S,) absolute positions of the chunk tokens
-    k_pos: jax.Array,        # (P,) absolute positions of past keys (<0: hole)
+    q_pos: jax.Array,        # (S,) | (B, S) absolute chunk-token positions
+    k_pos: jax.Array,        # (P,) | (B, P) absolute past-key pos (<0: hole)
     *,
     window: int = 0,
     attn_softcap: float = 0.0,
+    q_lens: jax.Array | None = None,   # (B,) real tokens per lane (ragged)
 ) -> jax.Array:
     """Attention of a prefill chunk against (resident cache ++ chunk) keys.
 
@@ -241,23 +256,40 @@ def chunk_attention(
     would.  The chunk's own keys are appended *after* the resident ones so
     rolling caches whose chunk writes would overwrite still-needed old keys
     stay attendable (write-back happens after this call).
+
+    ``q_pos``/``k_pos`` may carry a leading lane axis (mixed-step serving:
+    every lane at its own depth) and ``q_lens`` marks the ragged padding —
+    tokens at ``i >= q_lens[b]`` neither act as keys nor produce
+    meaningful output (the caller discards their rows).
     """
     kk = jnp.concatenate([k_past.astype(jnp.float32),
                           k.astype(jnp.float32)], axis=1)
     vv = jnp.concatenate([v_past.astype(jnp.float32),
                           v.astype(jnp.float32)], axis=1)
-    pos_all = jnp.concatenate([k_pos, q_pos])
     b, s, h, d = q.shape
+    q_pos2 = jnp.asarray(q_pos)
+    q_pos2 = q_pos2[None] if q_pos2.ndim == 1 else q_pos2      # (B|1, S)
+    k_pos2 = jnp.asarray(k_pos)
+    k_pos2 = k_pos2[None] if k_pos2.ndim == 1 else k_pos2      # (B|1, P)
+    chunk_pos = q_pos2
+    if q_lens is not None:
+        chunk_pos = jnp.where(
+            jnp.arange(s)[None] < jnp.asarray(q_lens)[:, None], q_pos2, -1)
+    bb = max(q_pos2.shape[0], k_pos2.shape[0], chunk_pos.shape[0])
+    pos_all = jnp.concatenate(
+        [jnp.broadcast_to(k_pos2, (bb, k_pos2.shape[1])),
+         jnp.broadcast_to(chunk_pos, (bb, s))], axis=1)        # (B|1, P+S)
     kh = kk.shape[2]
     g = h // kh
     qs = (q.astype(jnp.float32) * d ** -0.5).reshape(b, s, kh, g, d)
     sc = jnp.einsum("bqhgd,bkhd->bhgqk", qs, kk)
     if attn_softcap:
         sc = softcap(sc, attn_softcap)
-    ok = (pos_all[None, :] <= q_pos[:, None]) & (pos_all[None, :] >= 0)
+    ok = (pos_all[:, None, :] <= q_pos2[..., None]) & \
+        (pos_all[:, None, :] >= 0)
     if window:
-        ok &= pos_all[None, :] > q_pos[:, None] - window
-    sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+        ok &= pos_all[:, None, :] > q_pos2[..., None] - window
+    sc = jnp.where(ok[:, None, None], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vv)
     return out.reshape(b, s, h, vv.shape[-1])
@@ -268,23 +300,36 @@ def _rolling_slot_positions(pos, smax: int) -> jax.Array:
     *before* positions >= ``pos`` are written (negative = never written).
 
     Position p lands at slot p % smax, so slot j holds the largest
-    p < pos with p === j (mod smax)."""
+    p < pos with p === j (mod smax).  ``pos`` may be a scalar (one lane /
+    shared depth) or a ``(B,)`` vector (per-lane depths -> (B, smax))."""
     slot = jnp.arange(smax)
-    last = pos - 1
-    return last - (last - slot) % smax
+    last = jnp.asarray(pos)[..., None] - 1
+    return (last - (last - slot) % smax).reshape(
+        (-1, smax) if jnp.ndim(pos) else (smax,))
 
 
-def _rolling_write(cache: jax.Array, new: jax.Array, pos) -> jax.Array:
-    """Scatter chunk K/V ``new`` (B, S, ...) into a rolling cache at slots
-    (pos + i) % smax; only the last smax tokens survive when S > smax."""
+def _lane_chunk_write(cache: jax.Array, new: jax.Array, pos,
+                      q_lens=None, *, rolling: bool) -> jax.Array:
+    """Scatter chunk K/V ``new`` (B, S, ...) into per-lane caches at
+    per-lane positions ``pos`` (scalar or (B,)).  Rolling caches wrap at
+    slot ``p % smax`` and only the last ``smax`` real tokens survive when
+    a lane's chunk exceeds the window; ``q_lens`` marks ragged padding
+    (those writes are dropped, never clobbering live positions)."""
+    b, s = new.shape[:2]
     smax = cache.shape[1]
-    s = new.shape[1]
-    if s >= smax:
-        idx = (pos + s - smax + jnp.arange(smax)) % smax
-        new = new[:, -smax:]
+    i = jnp.arange(s)[None]                                   # (1, S)
+    pos = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
+    ql = (jnp.full((b, 1), s, jnp.int32) if q_lens is None
+          else jnp.asarray(q_lens, jnp.int32)[:, None])
+    keep = i < ql
+    if rolling:
+        keep &= i >= ql - smax
+        idx = jnp.where(keep, (pos + i) % smax, smax)
     else:
-        idx = (pos + jnp.arange(s)) % smax
-    return cache.at[:, idx].set(new.astype(cache.dtype))
+        idx = jnp.where(keep, pos + i, smax)
+    lane = jnp.arange(b)[:, None]
+    return cache.at[lane, idx].set(new.astype(cache.dtype), mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -320,61 +365,66 @@ def attn_apply(
     pos=None,                        # decode: () shared or (B,) per-lane pos
     prefix_len: int = 0,
     paged: PagedContext | None = None,
+    q_lens: jax.Array | None = None,  # (B,) real tokens per lane (ragged
+    #                                    mixed step; None = all real)
 ) -> tuple[jax.Array, dict | None]:
     b, s, _ = x.shape
     window = cfg.window if kind in ("swa", "local") else 0
     causal = kind != "bidir"
-    decode = cache is not None and s == 1
-    chunked = cache is not None and pos is not None and s > 1 and \
-        paged is None
+    decode = cache is not None and s == 1 and q_lens is None
+    chunked = cache is not None and pos is not None and paged is None and \
+        (s > 1 or q_lens is not None)
 
     if paged is not None:
         # ``pallas_paged`` backend: the cache leaves are the physical page
         # pools (n_pages, page, KH, HD) shared by every slot; this step's
-        # K/V is scattered into each slot's current page and attention
-        # walks the page table inside the kernel — no contiguous per-slot
-        # view is ever gathered.
-        assert decode, "paged attention is a decode-step backend"
-        from repro.kernels.paged_attention import paged_decode_attention
-        positions = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1))
+        # token block — 1..s tokens per slot, a prefill chunk or a single
+        # decode token — is scattered into each slot's pages and attention
+        # walks the page table inside the kernel, with per-token causal
+        # masks standing in for write-after-attend.  No contiguous
+        # per-slot view is ever gathered.
+        from repro.kernels.paged_attention import paged_mixed_attention
+        pos = jnp.asarray(pos, jnp.int32)
+        ql = (jnp.full((b,), s, jnp.int32) if q_lens is None
+              else jnp.asarray(q_lens, jnp.int32))
+        positions = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
         q, k, v = _qkv(p, x, cfg, positions)
-        k_pool = paged.write(cache["k"], k[:, 0], pos)
-        v_pool = paged.write(cache["v"], v[:, 0], pos)
+        k_pool = paged.write(cache["k"], k, pos, q_lens)
+        v_pool = paged.write(cache["v"], v, pos, q_lens)
         hd = cfg.head_dim
-        out = paged_decode_attention(
-            (q[:, 0].astype(jnp.float32) * hd ** -0.5), k_pool, v_pool,
-            paged.table, pos + 1, window=window,
+        out = paged_mixed_attention(
+            (q.astype(jnp.float32) * hd ** -0.5), k_pool, v_pool,
+            paged.table, pos + ql, ql, window=window,
             softcap_val=cfg.attn_logit_softcap, interpret=paged.interpret)
-        y = out[:, None].reshape(b, s, -1).astype(x.dtype) @ p["wo"]
+        y = out.reshape(b, s, -1).astype(x.dtype) @ p["wo"]
         return y, {"k": k_pool, "v": v_pool}
 
     if chunked:
-        # chunked prefill: s tokens at absolute positions pos..pos+s-1
-        # against a partially filled cache.  Attention runs over (resident
-        # cache ++ chunk) with absolute-position masks; the chunk's K/V is
-        # written back afterwards so rolling windows never read their own
-        # overwrites.
-        q_pos = pos + jnp.arange(s)
-        q, k, v = _qkv(p, x, cfg, q_pos[None, :])
+        # chunked prefill / mixed lane step: 1..s tokens per lane at
+        # absolute positions pos..pos+len-1 against a partially filled
+        # cache.  Attention runs over (resident cache ++ chunk) with
+        # absolute-position masks; the chunk's K/V is written back
+        # afterwards so rolling windows never read their own overwrites.
+        q_pos = jnp.asarray(pos)[..., None] + jnp.arange(s)  # (S,) | (B,S)
+        positions = q_pos if q_pos.ndim == 2 else q_pos[None, :]
+        q, k, v = _qkv(p, x, cfg, positions)
         smax = cache["k"].shape[1]
         rolling = bool(window)
         if rolling:
             k_pos = _rolling_slot_positions(pos, smax)
         else:
             slot = jnp.arange(smax)
-            k_pos = jnp.where(slot < pos, slot, -1)
+            k_pos = jnp.where(slot < jnp.asarray(pos)[..., None], slot, -1)
         out = chunk_attention(q, k, v, cache["k"], cache["v"], q_pos, k_pos,
                               window=window,
-                              attn_softcap=cfg.attn_logit_softcap)
-        if rolling:
-            k_cache = _rolling_write(cache["k"], k, pos)
-            v_cache = _rolling_write(cache["v"], v, pos)
-        else:
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
-        new_cache = {"k": k_cache, "v": v_cache}
+                              attn_softcap=cfg.attn_logit_softcap,
+                              q_lens=q_lens)
+        new_cache = {
+            "k": _lane_chunk_write(cache["k"], k, pos, q_lens,
+                                   rolling=rolling),
+            "v": _lane_chunk_write(cache["v"], v, pos, q_lens,
+                                   rolling=rolling),
+        }
     elif decode:
         rolling = bool(window)
         if jnp.ndim(pos) == 0:           # shared position (wave decode)
@@ -482,7 +532,7 @@ def mla_init(key, cfg, dtype) -> dict:
     }
 
 
-def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None):
+def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None, q_lens=None):
     b, s, d = x.shape
     h = cfg.num_heads
     r_kv = cfg.kv_lora_rank
@@ -492,7 +542,8 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None):
     # only the causal mask needs per-query positions
     decode = cache is not None and pos is not None
     if paged is not None:
-        positions = jnp.asarray(pos, jnp.int32)[:, None]      # (B, 1)
+        positions = jnp.asarray(pos, jnp.int32)[:, None] \
+            + jnp.arange(s, dtype=jnp.int32)[None]            # (B, S)
     else:
         positions = (pos + jnp.arange(s)[None, :] if decode
                      else jnp.arange(s)[None, :])
@@ -507,26 +558,29 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None):
     k_pe = apply_rope(dkv[..., None, r_kv:], positions, cfg.rope_theta)[:, :, 0]
 
     if paged is not None:
-        # absorbed decode straight over the paged latent pools: the MLA
-        # latent is one shared KV "head" whose key has a latent part
-        # (c_kv, scored against q absorbed through w_uk) and a rope part
-        # (k_pe) — exactly the kernel's (q, k) + (q2, k2) split, with the
-        # latent pool doubling as the value pool.
-        assert s == 1, "paged MLA is a decode-step backend"
-        from repro.kernels.paged_attention import paged_decode_attention
-        c_pool = paged.write(cache["c_kv"], c_kv[:, 0], pos)
-        pe_pool = paged.write(cache["k_pe"], k_pe[:, 0], pos)
+        # absorbed attention straight over the paged latent pools — one
+        # ragged mixed-step block of 1..s tokens per slot: the MLA latent
+        # is one shared KV "head" whose key has a latent part (c_kv,
+        # scored against q absorbed through w_uk) and a rope part (k_pe)
+        # — exactly the kernel's (q, k) + (q2, k2) split, with the latent
+        # pool doubling as the value pool.
+        from repro.kernels.paged_attention import paged_mixed_attention
+        pos = jnp.asarray(pos, jnp.int32)
+        ql = (jnp.full((b,), s, jnp.int32) if q_lens is None
+              else jnp.asarray(q_lens, jnp.int32))
+        c_pool = paged.write(cache["c_kv"], c_kv, pos, q_lens)
+        pe_pool = paged.write(cache["k_pe"], k_pe, pos, q_lens)
         w_uk = p["w_uk"].reshape(r_kv, h, dn)
-        q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
-                           w_uk.astype(jnp.float32))          # (B, H, r_kv)
-        ctx = paged_decode_attention(
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))      # (B, S, H, r_kv)
+        ctx = paged_mixed_attention(
             q_lat, c_pool[:, :, None], c_pool[:, :, None],
-            paged.table, pos + 1,
-            q_pe[:, 0].astype(jnp.float32), pe_pool[:, :, None],
+            paged.table, pos + ql, ql,
+            q_pe.astype(jnp.float32), pe_pool[:, :, None],
             scale=(dn + dr) ** -0.5, interpret=paged.interpret)
         w_uv = p["w_uv"].reshape(r_kv, h, dv)
-        out = jnp.einsum("bhr,rhv->bhv", ctx,
-                         w_uv.astype(jnp.float32))[:, None]   # (B, 1, H, dv)
+        out = jnp.einsum("bshr,rhv->bshv", ctx,
+                         w_uv.astype(jnp.float32))        # (B, S, H, dv)
         y = out.reshape(b, s, h * dv).astype(x.dtype) @ p["wo"]
         return y, {"c_kv": c_pool, "k_pe": pe_pool}
 

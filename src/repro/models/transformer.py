@@ -82,13 +82,15 @@ def block_init(kind: str, cfg, key, dtype) -> dict:
 
 def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
                 cache=None, pos=None, prefix_len: int = 0, enc_out=None,
-                paged=None):
+                paged=None, q_lens=None):
     """-> (x, new_cache, aux_loss).
 
-    ``paged`` (an ``attention.PagedContext``) is only passed on decode
-    steps of the ``pallas_paged`` backend, and only for blocks whose cache
-    leaves are page pools; lane-backed blocks receive ``paged=None`` and
-    run the gathered reference path.
+    ``paged`` (an ``attention.PagedContext``) is only passed on mixed /
+    decode steps of the ``pallas_paged`` backend, and only for blocks
+    whose cache leaves are page pools; lane-backed blocks receive
+    ``paged=None`` and run the gathered reference path.  ``q_lens``
+    carries the ragged per-slot token counts of a mixed step (None =
+    every token is real).
     """
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
@@ -103,13 +105,13 @@ def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
                                              cache=cache, pos=pos)
     elif kind in MLA_KINDS:
         y, new_cache = attn.mla_apply(p["attn"], h, cfg, cache=cache,
-                                      pos=pos, paged=paged)
+                                      pos=pos, paged=paged, q_lens=q_lens)
     else:
         self_cache = cache.get("self") if isinstance(cache, dict) and \
             "self" in (cache or {}) else cache
         y, new_self = attn.attn_apply(
             p["attn"], h, cfg, kind=_attn_kind(kind), cache=self_cache,
-            pos=pos, prefix_len=prefix_len, paged=paged)
+            pos=pos, prefix_len=prefix_len, paged=paged, q_lens=q_lens)
         new_cache = new_self
     if cfg.post_norms:
         y = rms_norm(p["post_ln1"], y, cfg.norm_eps)
@@ -285,26 +287,48 @@ def loss_fn(cfg, params, batch) -> jax.Array:
     return ce + 0.01 * aux
 
 
-def prefill(cfg, params, tokens, cache, *, vision_embeds=None):
-    """Run the full prompt, returning (last-token logits, filled cache)."""
-    prefix_len = vision_embeds.shape[1] if vision_embeds is not None else 0
-    x = _embed(cfg, params, tokens, vision_embeds)
-    new_cache = {"prefix": [], "suffix": []}
+def _run_stack(cfg, params, cache, x, *, pos=None, prefix_len: int = 0,
+               flags=None, ctx=None, q_lens=None):
+    """One pass through prefix + scan + suffix blocks, threading the cache.
 
-    for kind, p, c in zip(cfg.prefix_kinds, params["prefix"],
-                          cache["prefix"]):
-        x, nc, _ = block_apply(kind, cfg, p, x, cache=c,
-                               prefix_len=prefix_len)
+    The single block walker behind :func:`prefill`,
+    :func:`prefill_chunk`, :func:`decode_step`, and :func:`mixed_step` —
+    they differ only in how ``x`` is embedded, which positions are
+    attached, and which logits are kept.  ``flags``/``ctx`` carry the
+    per-leaf pageability mask + ``attention.PagedContext`` of a paged
+    mixed step (None = gathered/lane serving); ``q_lens`` the ragged
+    per-slot token counts.
+    """
+    def block_ctx(f):
+        if f is None:
+            return None
+        leaves = jax.tree_util.tree_leaves(f)
+        assert all(leaves) or not any(leaves), \
+            "mixed paged/lane cache leaves within one block"
+        return ctx if leaves and all(leaves) else None
+
+    new_cache = {"prefix": [], "suffix": []}
+    for i, (kind, p, c) in enumerate(zip(cfg.prefix_kinds,
+                                         params["prefix"],
+                                         cache["prefix"])):
+        x, nc, _ = block_apply(
+            kind, cfg, p, x, cache=c, pos=pos, prefix_len=prefix_len,
+            paged=block_ctx(flags["prefix"][i] if flags else None),
+            q_lens=q_lens)
         new_cache["prefix"].append(nc)
 
     if cfg.scan_repeats:
+        pgs = [block_ctx(flags["scan"][f"b{i}"] if flags else None)
+               for i in range(len(cfg.scan_pattern))]
+
         def body(x, xs):
             layer_params, layer_cache = xs
             ncs = {}
             for i, kind in enumerate(cfg.scan_pattern):
                 x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
-                                       cache=layer_cache[f"b{i}"],
-                                       prefix_len=prefix_len)
+                                       cache=layer_cache[f"b{i}"], pos=pos,
+                                       prefix_len=prefix_len, paged=pgs[i],
+                                       q_lens=q_lens)
                 ncs[f"b{i}"] = nc
             return x, ncs
 
@@ -313,15 +337,33 @@ def prefill(cfg, params, tokens, cache, *, vision_embeds=None):
     else:
         new_cache["scan"] = {}
 
-    for kind, p, c in zip(cfg.suffix_kinds, params["suffix"],
-                          cache["suffix"]):
-        x, nc, _ = block_apply(kind, cfg, p, x, cache=c,
-                               prefix_len=prefix_len)
+    for i, (kind, p, c) in enumerate(zip(cfg.suffix_kinds,
+                                         params["suffix"],
+                                         cache["suffix"])):
+        x, nc, _ = block_apply(
+            kind, cfg, p, x, cache=c, pos=pos, prefix_len=prefix_len,
+            paged=block_ctx(flags["suffix"][i] if flags else None),
+            q_lens=q_lens)
         new_cache["suffix"].append(nc)
+    return x, new_cache
 
+
+def prefill(cfg, params, tokens, cache, *, vision_embeds=None):
+    """Run the full prompt, returning (last-token logits, filled cache)."""
+    prefix_len = vision_embeds.shape[1] if vision_embeds is not None else 0
+    x = _embed(cfg, params, tokens, vision_embeds)
+    x, new_cache = _run_stack(cfg, params, cache, x, prefix_len=prefix_len)
     x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     logits = _unembed(cfg, params, x)
     return logits, new_cache
+
+
+def _embed_step(cfg, params, tokens):
+    """Embed serving-step tokens (no vision splice, lane-sharded)."""
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return constrain(x, "batch", None, None)
 
 
 def prefill_chunk(cfg, params, cache, tokens, pos):
@@ -335,40 +377,14 @@ def prefill_chunk(cfg, params, cache, tokens, pos):
     same absolute-position causal/window masks — which is what lets the
     scheduler interleave prompt chunks with decode steps of other slots
     (token-equivalence locked down in tests/test_paged_prefill.py).
-    Recurrent blocks (ssm / rglru) cannot resume a prompt mid-scan and
-    raise; ``models.api.supports_chunked_prefill`` gates them off.
+    This is the *gathered oracle's* chunk step (standalone batch-1 cache);
+    the ``pallas_paged`` backend runs chunks through :func:`mixed_step`
+    instead.  Recurrent blocks (ssm / rglru) cannot resume a prompt
+    mid-scan and raise; ``models.api.supports_chunked_prefill`` gates
+    them off.
     """
-    x = params["embed"][tokens]
-    if cfg.scale_embeddings:
-        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
-    x = constrain(x, "batch", None, None)
-    new_cache = {"prefix": [], "suffix": []}
-
-    for kind, p, c in zip(cfg.prefix_kinds, params["prefix"],
-                          cache["prefix"]):
-        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
-        new_cache["prefix"].append(nc)
-
-    if cfg.scan_repeats:
-        def body(x, xs):
-            layer_params, layer_cache = xs
-            ncs = {}
-            for i, kind in enumerate(cfg.scan_pattern):
-                x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
-                                       cache=layer_cache[f"b{i}"], pos=pos)
-                ncs[f"b{i}"] = nc
-            return x, ncs
-
-        x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
-        new_cache["scan"] = scan_cache
-    else:
-        new_cache["scan"] = {}
-
-    for kind, p, c in zip(cfg.suffix_kinds, params["suffix"],
-                          cache["suffix"]):
-        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
-        new_cache["suffix"].append(nc)
-
+    x = _embed_step(cfg, params, tokens)
+    x, new_cache = _run_stack(cfg, params, cache, x, pos=pos)
     x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     return _unembed(cfg, params, x), new_cache
 
@@ -379,114 +395,56 @@ def decode_step(cfg, params, cache, tokens, pos):
     ``pos`` is the absolute position of ``tokens`` (vision prefix included
     for VLM archs).
     """
-    x = params["embed"][tokens]
-    if cfg.scale_embeddings:
-        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
-    x = constrain(x, "batch", None, None)
-    new_cache = {"prefix": [], "suffix": []}
-
-    for kind, p, c in zip(cfg.prefix_kinds, params["prefix"],
-                          cache["prefix"]):
-        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
-        new_cache["prefix"].append(nc)
-
-    if cfg.scan_repeats:
-        def body(x, xs):
-            layer_params, layer_cache = xs
-            ncs = {}
-            for i, kind in enumerate(cfg.scan_pattern):
-                x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
-                                       cache=layer_cache[f"b{i}"], pos=pos)
-                ncs[f"b{i}"] = nc
-            return x, ncs
-
-        x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
-        new_cache["scan"] = scan_cache
-    else:
-        new_cache["scan"] = {}
-
-    for kind, p, c in zip(cfg.suffix_kinds, params["suffix"],
-                          cache["suffix"]):
-        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos)
-        new_cache["suffix"].append(nc)
-
+    x = _embed_step(cfg, params, tokens)
+    x, new_cache = _run_stack(cfg, params, cache, x, pos=pos)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     return _unembed(cfg, params, x), new_cache
 
 
-def decode_step_paged(cfg, params, cache, table, tokens, poss, *,
-                      paged_flags: tuple, page_size: int,
-                      interpret: bool = False):
-    """One decode step for *every* slot straight over the paged KV pools.
+def mixed_step(cfg, params, cache, table, tokens, poss, q_lens, *,
+               paged_flags: tuple, page_size: int,
+               interpret: bool = False):
+    """One mixed serving step for *every* slot straight over the paged KV
+    pools: slot ``s`` contributes ``q_lens[s]`` consecutive tokens — a
+    prefill chunk, a single decode token, or nothing (``0``, a free lane)
+    — out of the padded block ``tokens`` ``(S, Q)``, starting at absolute
+    position ``poss[s]``.
 
-    The ``pallas_paged`` attention backend: ``cache`` has the same tree
-    structure as :func:`init_cache_specs` but each pageable leaf is the
-    *physical page pool* shared by all slots (``(n_pages, page, ...)``;
-    scan-stacked leaves keep their leading repeats axis) and each
-    non-pageable leaf is a batched per-slot lane (``(n_slots, ...)``).
-    ``table`` ``(S, P)`` maps logical to physical pages per slot and
-    ``poss`` ``(S,)`` carries per-slot positions; ``tokens`` is ``(S, 1)``.
+    This is the ``pallas_paged`` backend's only step function (decode is
+    the ``Q == 1``, all-``q_lens``-1 special case; the former
+    ``decode_step_paged`` and the paged half of chunked prefill merged
+    here): ``cache`` has the same tree structure as
+    :func:`init_cache_specs` but each pageable leaf is the *physical page
+    pool* shared by all slots (``(n_pages, page, ...)``; scan-stacked
+    leaves keep their leading repeats axis) and each non-pageable leaf is
+    a batched per-slot lane (``(n_slots, ...)``).  ``table`` ``(S, P)``
+    maps logical to physical pages per slot.
 
     ``paged_flags`` is the flat per-leaf pageability mask from
     ``models.api.cache_layout`` (static — it picks the kernel vs lane path
-    per block at trace time).  Unlike :func:`decode_step`, which the
-    scheduler vmaps over gathered per-slot views, this runs all slots in
-    one batched trace so the attention kernel can walk the shared pool —
-    there is no per-step gather/scatter of the cache anywhere in the step.
+    per block at trace time).  Pageable leaves take the in-kernel path:
+    the chunk's K/V is scattered into the slot's pages *before* the
+    kernel walks the page table (per-token causal masks preserve
+    write-after-attend semantics; ragged padding is routed to the page-0
+    dummy sink).  Lane leaves (rolling-window KV) run the gathered
+    reference chunk attention on their lanes in the same trace, with
+    write-after-attend and ragged writes dropped past ``q_lens``.  There
+    is no per-step gather/scatter of the cache anywhere — for decode
+    tokens *or* prefill chunks.
 
-    Returns ``(logits (S, 1, V), new cache tree)`` with the pool leaves
+    Returns ``(logits (S, Q, V), new cache tree)`` with the pool leaves
     updated in place (donation-friendly: every output leaf has its input
-    leaf's shape and dtype).
+    leaf's shape and dtype).  Logits of padded rows (``i >= q_lens[s]``)
+    are garbage the caller ignores; a slot's next token comes from row
+    ``q_lens[s] - 1``.
     """
     specs = init_cache_specs(cfg, 1, page_size)
     flags = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(specs), list(paged_flags))
     ctx = attn.PagedContext(table=table, page_size=page_size,
                             interpret=interpret)
-
-    def block_ctx(f):
-        leaves = jax.tree_util.tree_leaves(f)
-        assert all(leaves) or not any(leaves), \
-            "mixed paged/lane cache leaves within one block"
-        return ctx if leaves and all(leaves) else None
-
-    x = params["embed"][tokens]
-    if cfg.scale_embeddings:
-        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
-    x = constrain(x, "batch", None, None)
-    new_cache = {"prefix": [], "suffix": []}
-
-    for kind, p, c, f in zip(cfg.prefix_kinds, params["prefix"],
-                             cache["prefix"], flags["prefix"]):
-        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=poss,
-                               paged=block_ctx(f))
-        new_cache["prefix"].append(nc)
-
-    if cfg.scan_repeats:
-        pgs = [block_ctx(flags["scan"][f"b{i}"])
-               for i in range(len(cfg.scan_pattern))]
-
-        def body(x, xs):
-            layer_params, layer_cache = xs
-            ncs = {}
-            for i, kind in enumerate(cfg.scan_pattern):
-                x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
-                                       cache=layer_cache[f"b{i}"],
-                                       pos=poss, paged=pgs[i])
-                ncs[f"b{i}"] = nc
-            return x, ncs
-
-        x, scan_cache = jax.lax.scan(body, x,
-                                     (params["scan"], cache["scan"]))
-        new_cache["scan"] = scan_cache
-    else:
-        new_cache["scan"] = {}
-
-    for kind, p, c, f in zip(cfg.suffix_kinds, params["suffix"],
-                             cache["suffix"], flags["suffix"]):
-        x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=poss,
-                               paged=block_ctx(f))
-        new_cache["suffix"].append(nc)
-
+    x = _embed_step(cfg, params, tokens)
+    x, new_cache = _run_stack(cfg, params, cache, x, pos=poss, flags=flags,
+                              ctx=ctx, q_lens=q_lens)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     return _unembed(cfg, params, x), new_cache

@@ -41,7 +41,12 @@ Compression on BNNs"), module by module:
                        page tables to kernels.paged_attention, which
                        walks the table in-kernel — the §IV consume-in-
                        place principle applied to KV, zero per-step cache
-                       copies.  mode="wave" reproduces the old
+                       copies.  With chunked prefill it runs mixed-step
+                       execution: prefill chunks and decode tokens of
+                       every slot ride one ragged batched invocation per
+                       iteration, chunks write straight into the pools,
+                       and the prefill path's install copy disappears
+                       too.  mode="wave" reproduces the old
                        wave-granular scheduling as a slot config; every
                        scheduling config and both backends are
                        token-identical, only latency, occupancy, and
@@ -50,8 +55,10 @@ Compression on BNNs"), module by module:
                        throughput, slot occupancy, decode-cache hit rate,
                        HBM bytes streamed vs avoided, prefill-chunk
                        latency / decode stall, KV-page occupancy, and
-                       per-step KV gather/scatter bytes moved vs avoided
-                       (the acceptance signal for the in-kernel backend).
+                       KV gather/scatter bytes moved vs avoided on both
+                       the decode and prefill paths (the acceptance
+                       signal for the in-kernel backend and the
+                       mixed-step path: both must read 0 moved).
   ===================  ====================================================
 
 The module <-> paper-structure mapping, with the request lifecycle

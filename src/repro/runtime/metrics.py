@@ -28,9 +28,16 @@ Attention-backend accounting: ``kv_gather_bytes`` counts the cache bytes
 the decode hot path copied through the per-step page gather/scatter
 (the ``gathered`` backend's two full view copies per step) and
 ``kv_gather_bytes_avoided`` the bytes the in-kernel ``pallas_paged``
-backend did *not* copy.  A paged-kernel run must report
-``kv_gather_bytes == 0`` — that zero is the acceptance criterion for
-killing the per-step page gather, and tests assert it.
+backend did *not* copy.  The same accounting extends to prefill:
+``kv_prefill_gather_bytes`` counts the cache bytes prefill moved between
+the pools and standalone/batch-1 caches (the gathered oracle's
+install-time scatter of a freshly prefilled cache into the slot's pages
+and lane) and ``kv_prefill_gather_bytes_avoided`` the install copies the
+mixed-step path never performed (its chunks write straight into the
+pools).  A paged-kernel mixed-step run must report **both** gather
+counters == 0 — those zeros are the acceptance criterion for killing the
+per-step page copies on the decode *and* prefill paths, and tests assert
+them.
 """
 
 from __future__ import annotations
@@ -74,6 +81,13 @@ class ServeMetrics:
     #                                    truly killed the copies)
     kv_gather_bytes_avoided: int = 0   # copies the pallas_paged backend
     #                                    skipped vs the gathered oracle
+    kv_prefill_gather_bytes: int = 0   # prefill-path cache copies (the
+    #                                    gathered oracle's install-time
+    #                                    scatter; 0 under mixed-step
+    #                                    pallas_paged — chunks write
+    #                                    straight into the pools)
+    kv_prefill_gather_bytes_avoided: int = 0  # install copies mixed-step
+    #                                    prefill skipped vs the oracle
     _t0: float = dataclasses.field(default_factory=time.monotonic)
 
     # -- recording ---------------------------------------------------------
@@ -116,6 +130,15 @@ class ServeMetrics:
         backend, whose kernel walks the page table in place)."""
         self.kv_gather_bytes += moved
         self.kv_gather_bytes_avoided += avoided
+
+    def record_prefill_gather(self, moved: int, avoided: int) -> None:
+        """Prefill-path cache bytes copied between pools and standalone
+        caches (``moved``; the gathered oracle scatters each freshly
+        prefilled batch-1 cache into the slot's pages + lane at install)
+        and install copies the mixed-step path skipped because its chunks
+        were written straight into the pools (``avoided``)."""
+        self.kv_prefill_gather_bytes += moved
+        self.kv_prefill_gather_bytes_avoided += avoided
 
     def record_decode_step(self, n_tokens: int, dt: float,
                            n_slots: int = 0) -> None:
@@ -175,6 +198,13 @@ class ServeMetrics:
             parts.append(
                 f"kv gather {_fmt_bytes(self.kv_gather_bytes)} "
                 f"(avoided {_fmt_bytes(self.kv_gather_bytes_avoided)})")
+        if self.kv_prefill_gather_bytes or \
+                self.kv_prefill_gather_bytes_avoided:
+            parts.append(
+                f"prefill gather "
+                f"{_fmt_bytes(self.kv_prefill_gather_bytes)} "
+                f"(avoided "
+                f"{_fmt_bytes(self.kv_prefill_gather_bytes_avoided)})")
         if cache is not None:
             parts.append(f"cache hit-rate {cache.hit_rate() * 100:.1f}%")
             parts.append(f"streamed {_fmt_bytes(cache.bytes_streamed)}, "

@@ -37,11 +37,15 @@ locked down in tests/test_paged_prefill.py).
 Scheduler-state invariants (enforced by construction, asserted in tests):
 
   * slot lifecycle   — FREE (req is None) -> PREFILLING (req set,
-    ``prefilling``; chunk cursor advances on a standalone batch-1 cache
-    outside the pool) -> ACTIVE (cache installed in the lane/pages, decode
-    advances ``pos``) -> FREE (retire releases pages + reservations).
-    Admission overwrites the whole lane, so a free lane's stale state can
-    never leak into a new request.
+    ``prefilling``; under the gathered backend the chunk cursor advances
+    on a standalone batch-1 cache outside the pool, under the
+    ``pallas_paged`` **mixed-step** path chunks write straight into the
+    slot's pages/lane and no standalone cache exists) -> ACTIVE (cache
+    in the lane/pages, decode advances ``pos``) -> FREE (retire releases
+    pages + reservations).  Admission overwrites the whole lane — and
+    mixed-step prefill rewrites every position before the masks can
+    expose it — so a free lane's stale state can never leak into a new
+    request.
   * page ownership   — a physical page is referenced by at most one slot's
     table row; page 0 is the shared dummy sink that absorbs writes from
     free lanes (which keep decoding for fixed shapes, output discarded)
@@ -68,6 +72,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Callable
 
 import jax
@@ -85,6 +90,19 @@ from repro.runtime.weight_store import WeightStore
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
 SLOT_LEN_QUANTUM = 16      # slot cache lengths round up to this many tokens
 DUMMY_PAGE = 0             # physical page that absorbs idle-lane writes
+
+# capability downgrades warn once per (arch family, capability) so a
+# fleet of Scheduler instances does not spam, but the first silent
+# downgrade is impossible (satellite of the mixed-step refactor)
+_FALLBACK_WARNED: set = set()
+
+
+def _warn_fallback(family: str, capability: str, message: str) -> None:
+    key = (family, capability)
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(message, RuntimeWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -230,11 +248,12 @@ class ServeEngine:
                 lambda p, c, t, q: self.api.prefill_chunk(self.cfg, p, c,
                                                           t, q),
                 donate_argnums=(1,))
-        # pallas_paged backend: one compiled paged decode per cache layout
-        # (the pools are donated; the Pallas kernel runs interpreted on
-        # hosts without a TPU, compiled on TPU)
+        # pallas_paged backend: one compiled mixed step per (cache layout,
+        # padded block width) — decode-only ticks compile at Q=1, chunked
+        # ticks at Q=prefill_chunk (the pools are donated; the Pallas
+        # kernel runs interpreted on hosts without a TPU, compiled on TPU)
         self.kernel_interpret = jax.default_backend() != "tpu"
-        self._paged_jits: dict = {}
+        self._mixed_jits: dict = {}
 
     @property
     def supports_chunked_prefill(self) -> bool:
@@ -243,26 +262,29 @@ class ServeEngine:
 
     @property
     def supports_paged_attention(self) -> bool:
-        return self.api.decode_step_paged is not None and \
+        return self.api.mixed_step is not None and \
             supports_paged_attention(self.cfg)
 
-    def paged_slot_decode(self, params, kcache, table, toks, poss, *,
-                          paged_flags: tuple, page_size: int):
-        """One decode step for every slot straight over the paged pools:
-        toks (S, 1) int32, poss (S,) int32 -> (logits (S, 1, V), new
-        cache tree).  ``kcache`` is donated — the page-pool update happens
-        in place, with no per-step gather/scatter anywhere."""
-        key = (paged_flags, page_size)
-        fn = self._paged_jits.get(key)
+    def mixed_step(self, params, kcache, table, toks, poss, q_lens, *,
+                   paged_flags: tuple, page_size: int):
+        """One ragged mixed step for every slot straight over the paged
+        pools: toks (S, Q) int32, poss (S,) int32 start positions, q_lens
+        (S,) int32 real token counts (0 = free lane) -> (logits (S, Q, V),
+        new cache tree).  ``kcache`` is donated — the page-pool update
+        happens in place, with no gather/scatter anywhere on the prefill
+        or decode path."""
+        key = (paged_flags, page_size, int(toks.shape[1]))
+        fn = self._mixed_jits.get(key)
         if fn is None:
             step = functools.partial(
-                self.api.decode_step_paged, self.cfg,
+                self.api.mixed_step, self.cfg,
                 paged_flags=paged_flags, page_size=page_size,
                 interpret=self.kernel_interpret)
-            fn = jax.jit(lambda p, c, t, tok, pos: step(p, c, t, tok, pos),
-                         donate_argnums=(1,))
-            self._paged_jits[key] = fn
-        return fn(params, kcache, table, toks, poss)
+            fn = jax.jit(
+                lambda p, c, t, tok, pos, ql: step(p, c, t, tok, pos, ql),
+                donate_argnums=(1,))
+            self._mixed_jits[key] = fn
+        return fn(params, kcache, table, toks, poss, q_lens)
 
     def step_params(self):
         """Per-step serving params (tile-cache-served when compressed)."""
@@ -379,7 +401,7 @@ class SlotPool:
         layout (each pageable leaf's length axis becomes ``(n_pages,
         page)`` in place, the batch axis is dropped; lane leaves batch the
         slot axis in place of batch) and the donated tree is handed to
-        ``decode_step_paged`` together with the page table: the Pallas
+        ``mixed_step`` together with the page table: the Pallas
         kernel walks the table in-kernel and the per-step
         ``_gather``/``_scatter_pages`` copies disappear entirely.  The
         gather/scatter machinery survives only for admission (installing a
@@ -427,6 +449,13 @@ class SlotPool:
         self.pages_per_slot = (slot_len // page_size) if self.paged else 0
         self.slots = [Slot(i) for i in range(n_slots)]
         specs = engine.api.init_cache_specs(engine.cfg, 1, slot_len)
+        # install() copies one freshly prefilled batch-1 cache into the
+        # slot's pages + lane — the prefill-path gather traffic the
+        # mixed-step path eliminates (its chunks write straight into the
+        # pools, so a chunked pallas_paged admission never installs)
+        self.install_bytes = sum(
+            int(np.prod(s.shape)) * s.dtype.itemsize
+            for s in jax.tree_util.tree_leaves(specs))
         if not self.paged:
             self.cache = jax.tree_util.tree_map(
                 lambda s: jnp.zeros((n_slots, *s.shape), s.dtype), specs)
@@ -696,6 +725,10 @@ class SlotPool:
         slot.pcache = None
         slot.tok = tok
         slot.pos = end
+        # install is the prefill path's cache copy (pool/lane scatter of
+        # the standalone prefill cache) — counted so the mixed-step path
+        # can assert it moved nothing
+        self.engine.metrics.record_prefill_gather(self.install_bytes, 0)
 
     def retire(self, slot: Slot) -> None:
         """Release the slot's lane, pages, and outstanding reservations."""
@@ -710,6 +743,20 @@ class SlotPool:
         slot.pcache = None
         slot.req = None
 
+    # -- mixed step (pallas_paged): prefill chunks + decode, one trace ------
+    def mixed_step(self, params, toks, poss, q_lens):
+        """One ragged mixed step over the donated pools: toks (S, Q),
+        poss (S,) start positions, q_lens (S,) real token counts (0 =
+        free lane) -> logits (S, Q, V).  Pages backing every written
+        position must already be ensured by the caller."""
+        assert self.backend == "pallas_paged"
+        logits, self.kcache = self.engine.mixed_step(
+            params, self.kcache, jnp.asarray(self.table),
+            jnp.asarray(toks, dtype=jnp.int32), jnp.asarray(poss),
+            jnp.asarray(q_lens), paged_flags=self.paged_flags,
+            page_size=self.page_size)
+        return logits
+
     # -- decode -------------------------------------------------------------
     def decode(self, params) -> list[tuple[Slot, int, bool]]:
         """One decode step for every slot -> per active slot (slot, next
@@ -722,17 +769,15 @@ class SlotPool:
         active = self.active()
         toks = np.zeros((self.n_slots, 1, 1), np.int32)
         poss = np.zeros(self.n_slots, np.int32)
+        q_lens = np.zeros(self.n_slots, np.int32)
         for s in active:
             toks[s.index, 0, 0] = s.tok
             poss[s.index] = s.pos
+            q_lens[s.index] = 1
             if self.paged:
                 self._ensure_pages(s, s.pos)   # page for this step's write
         if self.backend == "pallas_paged":
-            table = jnp.asarray(self.table)
-            logits, self.kcache = self.engine.paged_slot_decode(
-                params, self.kcache, table, jnp.asarray(toks[:, :, 0]),
-                jnp.asarray(poss), paged_flags=self.paged_flags,
-                page_size=self.page_size)
+            logits = self.mixed_step(params, toks[:, :, 0], poss, q_lens)
             last = logits[:, -1]                          # (S, V)
         elif self.paged:
             table = jnp.asarray(self.table)
@@ -779,8 +824,19 @@ class Scheduler:
     (default — copy pages into contiguous per-slot views each step, the
     reference oracle) or ``"pallas_paged"`` (the in-kernel paged-attention
     backend: requires ``kv_page_size``; archs without attention-style
-    caches fall back to ``gathered`` with a note, like the chunked-prefill
-    fallback).  Both backends are token-identical by test.
+    caches fall back to ``gathered`` with a RuntimeWarning naming the
+    capability probe that failed — warned once per family — plus the
+    emitted note, like the chunked-prefill fallback).  Both backends are
+    token-identical by test.
+
+    ``attn_backend="pallas_paged"`` together with ``prefill_chunk``
+    engages the unified **mixed-step** path: every scheduler iteration,
+    active slots contribute their decode token and prefilling slots up to
+    one prompt chunk to a *single* ragged ``mixed_step`` trace over the
+    donated page pools.  There is no standalone prefill cache and no
+    install copy — per-iteration KV gather bytes are zero on the prefill
+    and decode paths alike, and the gathered chunk loop below survives as
+    the token-identical oracle.
     """
 
     def __init__(self, engine: ServeEngine, *, batch_size: int = 4,
@@ -823,11 +879,22 @@ class Scheduler:
         if prefill_chunk is not None and \
                 not engine.supports_chunked_prefill:
             self.prefill_chunk = None
+            _warn_fallback(
+                engine.cfg.family, "chunked_prefill",
+                f"{engine.cfg.family} arch downgraded to monolithic "
+                f"prefill: supports_chunked_prefill=False (recurrent "
+                f"state or multimodal prefix cannot resume a prompt "
+                f"mid-cache)")
             emit(f"note: {engine.cfg.family} arch cannot resume a prompt "
                  "mid-cache; falling back to monolithic prefill")
         if attn_backend == "pallas_paged" and \
                 not engine.supports_paged_attention:
             self.attn_backend = "gathered"
+            _warn_fallback(
+                engine.cfg.family, "paged_attention",
+                f"{engine.cfg.family} arch downgraded to the gathered "
+                f"attention backend: supports_paged_attention=False (no "
+                f"attention-style cache to page)")
             emit(f"note: {engine.cfg.family} arch has no paged decode "
                  "attention; falling back to the gathered backend")
 
@@ -892,10 +959,23 @@ class Scheduler:
         pool = self._ensure_pool()
         while self._queue or pool.busy():
             self._admit(pool, completed)
-            self._prefill_tick(pool, completed)
-            if pool.active():
-                self._step(pool, completed)
+            if self._mixed_path(pool):
+                self._mixed_tick(pool, completed)
+            else:
+                self._prefill_tick(pool, completed)
+                if pool.active():
+                    self._step(pool, completed)
         return completed
+
+    def _mixed_path(self, pool: SlotPool) -> bool:
+        """True when serving runs the unified mixed-step path: prefill
+        chunks and decode tokens of every slot ride one batched
+        ``mixed_step`` trace per iteration, writing straight into the
+        page pools (``pallas_paged`` + chunked prefill; the gathered
+        backend keeps the standalone-cache chunk loop as the
+        token-identical oracle)."""
+        return pool.backend == "pallas_paged" and \
+            self.prefill_chunk is not None
 
     def _record_first_token(self, req: Request, tok: int) -> None:
         req.generated.append(tok)
@@ -917,7 +997,10 @@ class Scheduler:
             slot.req = req
             slot.prefilling = True
             slot.prefill_cursor = 0
-            slot.pcache = self.engine.fresh_slot_cache(pool.slot_len)
+            # mixed-step prefill writes chunks straight into the slot's
+            # pages/lane — no standalone batch-1 cache exists at all
+            slot.pcache = None if self._mixed_path(pool) else \
+                self.engine.fresh_slot_cache(pool.slot_len)
             return
         t0 = time.monotonic()
         slot.req = req
@@ -977,7 +1060,10 @@ class Scheduler:
 
     def _prefill_tick(self, pool: SlotPool, completed: list[Request]) -> None:
         """Advance chunked prefills by up to ``prefill_budget`` prompt
-        tokens (whole chunks; at least one per tick for progress).
+        tokens (whole chunks; at least one per tick for progress) — the
+        gathered oracle's chunk loop, each prefilling slot on its
+        standalone batch-1 cache (the ``pallas_paged`` backend runs
+        chunks through :meth:`_mixed_tick` instead).
 
         Chunks round-robin across prefilling slots so a short prompt
         admitted next to a long one reaches its first token after its own
@@ -1016,6 +1102,104 @@ class Scheduler:
                     m.record_admit(1, 0.0, tokens=1)
                     self._maybe_finish(pool, slot, completed)
             pending = [s for s in pending if s.prefilling]
+
+    def _mixed_tick(self, pool: SlotPool,
+                    completed: list[Request]) -> None:
+        """One iteration of the unified mixed-step path: every active
+        slot contributes its decode token and every prefilling slot up to
+        one prompt chunk, all through a single ragged ``mixed_step``
+        trace over the donated page pools.  ``prefill_budget`` caps the
+        *total* chunk tokens admitted to the trace (always at least one
+        chunk for progress); unlike the gathered chunk loop, a slot can
+        never advance more than ``prefill_chunk`` tokens per iteration —
+        the trace width Q is bounded, so budget beyond
+        ``n_prefilling * prefill_chunk`` has no additional effect.
+
+        There is no standalone prefill cache and no install copy — chunk
+        K/V lands straight in the slot's pages (lane leaves are written
+        in the same trace with ragged masks) — so per-iteration KV gather
+        bytes are zero on the prefill and decode paths alike, which the
+        metrics record and tests assert."""
+        m = self.engine.metrics
+        active = pool.active()
+        chunks: list[tuple[Slot, int]] = []
+        spent = 0
+        for slot in pool.prefilling():
+            if spent >= self.prefill_budget and chunks:
+                break
+            c = min(self.prefill_chunk,
+                    slot.req.prompt_len - slot.prefill_cursor)
+            chunks.append((slot, c))
+            spent += c
+        if not active and not chunks:
+            return
+        # pad every chunk-carrying tick to one block width so compiled
+        # mixed-step shapes stay bounded: Q = prefill_chunk while chunks
+        # are in flight (remainders ride padded), Q = 1 for pure decode
+        width = min(self.prefill_chunk, pool.slot_len) if chunks else 1
+        toks = np.zeros((pool.n_slots, width), np.int32)
+        poss = np.zeros(pool.n_slots, np.int32)
+        q_lens = np.zeros(pool.n_slots, np.int32)
+        for slot in active:
+            toks[slot.index, 0] = slot.tok
+            poss[slot.index] = slot.pos
+            q_lens[slot.index] = 1
+            pool._ensure_pages(slot, slot.pos)
+        for slot, c in chunks:
+            cur = slot.prefill_cursor
+            toks[slot.index, :c] = slot.req.prompt[cur:cur + c]
+            poss[slot.index] = cur
+            q_lens[slot.index] = c
+            pool._ensure_pages(slot, cur + c - 1)
+        t0 = time.monotonic()
+        params = self.engine.step_params()
+        logits = pool.mixed_step(params, toks, poss, q_lens)
+        last = logits[jnp.arange(pool.n_slots),
+                      jnp.maximum(jnp.asarray(q_lens) - 1, 0)]   # (S, V)
+        nxt = np.asarray(jnp.argmax(last, axis=-1)).astype(np.int32)
+        finite = np.asarray(jnp.isfinite(last).all(axis=-1))
+        dt = time.monotonic() - t0
+        # wall time attributed to decode vs prefill by token share
+        n_chunk_toks = sum(c for _, c in chunks)
+        total = len(active) + n_chunk_toks
+        dt_decode = dt * len(active) / total if total else 0.0
+        for slot in active:
+            if not finite[slot.index]:
+                raise RuntimeError(
+                    f"non-finite logits in mixed step for request "
+                    f"{slot.req.rid} (compressed reconstruction or model "
+                    f"numerics are broken)")
+            slot.pos += 1
+            slot.tok = int(nxt[slot.index])
+            slot.req.generated.append(slot.tok)
+            self._maybe_finish(pool, slot, completed)
+        for slot, c in chunks:
+            m.record_prefill_chunk(c, (dt - dt_decode) / len(chunks),
+                                   stalled=bool(active))
+            slot.prefill_cursor += c
+            if slot.prefill_cursor >= slot.req.prompt_len:
+                if not finite[slot.index]:
+                    raise RuntimeError(
+                        "non-finite prefill logits (compressed "
+                        "reconstruction or model numerics are broken)")
+                req = slot.req
+                slot.prefilling = False
+                slot.pcache = None
+                slot.tok = int(nxt[slot.index])
+                slot.pos = self.engine.pos_offset(req.prompt_len)
+                self._record_first_token(req, slot.tok)
+                m.record_admit(1, 0.0, tokens=1)
+                # the install copy the gathered oracle performs at the
+                # end of every prefill never happened here
+                m.record_prefill_gather(0, pool.install_bytes)
+                self._maybe_finish(pool, slot, completed)
+        if active:
+            m.record_decode_step(len(active), dt_decode,
+                                 n_slots=pool.n_slots)
+            m.record_pages(pool.pages_in_use(), pool.allocator.total)
+            m.record_kv_gather(0, pool.gather_bytes_avoided_per_step)
+            if self.log_every and m.decode_steps % self.log_every == 0:
+                self.emit(self.engine.stats_line())
 
     def _step(self, pool: SlotPool, completed: list[Request]) -> None:
         m = self.engine.metrics

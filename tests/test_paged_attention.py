@@ -271,14 +271,14 @@ class TestKernelBackendHotPath:
         sched.submit(prompts[0], 6)
         out1 = sched.run()
         assert len(out1) == 1
-        key = (sched._pool.paged_flags, sched._pool.page_size)
-        c0 = engine._paged_jits[key]._cache_size()
+        key = (sched._pool.paged_flags, sched._pool.page_size, 1)
+        c0 = engine._mixed_jits[key]._cache_size()
         sched._pool.grow_pages(9)
         sched.submit(prompts[1], 6)
         sched.submit(prompts[2], 6)
         out2 = sched.run()
         assert len(out2) == 2
-        assert engine._paged_jits[key]._cache_size() == c0
+        assert engine._mixed_jits[key]._cache_size() == c0
         assert sched._pool.allocator.n_allocated == 0
         # identical prompts generate identical tokens before/after growth
         ref = serve(engine, [(prompts[0], 6)], buckets=(16,))

@@ -103,6 +103,27 @@ class TestTokenEquivalence:
         assert out == base
         assert any("monolithic" in n for n in notes)
 
+    def test_recurrent_fallback_warns_once_with_reason(self):
+        """The monolithic-prefill downgrade is never silent: the first
+        Scheduler that hits it raises a RuntimeWarning naming the reason
+        (supports_chunked_prefill=False); later Schedulers of the same
+        family stay quiet (warn-once) but still emit the note."""
+        import warnings
+
+        from repro.runtime import scheduler as sched_mod
+
+        engine = make_engine("recurrentgemma-2b")
+        sched_mod._FALLBACK_WARNED.clear()
+        with pytest.warns(RuntimeWarning,
+                          match="supports_chunked_prefill=False"):
+            Scheduler(engine, prefill_chunk=4, emit=lambda s: None)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")     # a second warning -> fail
+            notes = []
+            sched = Scheduler(engine, prefill_chunk=4, emit=notes.append)
+        assert sched.prefill_chunk is None
+        assert any("monolithic" in n for n in notes)
+
 
 class TestPageAllocator:
     def test_free_xor_allocated(self):
@@ -134,6 +155,47 @@ class TestPageAllocator:
         a.release([pid])
         with pytest.raises(AssertionError):
             a.release([pid])
+
+    def test_fragmented_free_list_keeps_reservations_infallible(self):
+        """Interleaved admit/retire until the free list is riddled with
+        holes: reservations must still make every subsequent alloc
+        infallible (the mid-decode no-OOM guarantee does not depend on
+        contiguity), and free xor allocated must hold throughout."""
+        rng = np.random.default_rng(0)
+        a = PageAllocator(range(1, 65))
+        # deterministic fragmentation: admit 16 four-page requests (ids
+        # hand out in order), then retire every other one — the free
+        # list is now 8 disjoint runs with allocated pages between them
+        assert a.reserve(64)
+        groups = [[a.alloc() for _ in range(4)] for _ in range(16)]
+        held: list[list[int]] = []
+        for i, grp in enumerate(groups):
+            if i % 2 == 0:
+                a.release(grp)
+            else:
+                held.append(grp)
+        free = sorted(a._free)
+        assert any(b - c > 1 for c, b in zip(free, free[1:])), \
+            "free list unexpectedly contiguous"
+        # random admit/retire churn on top, invariants at every step
+        for _ in range(300):
+            if held and rng.random() < 0.5:
+                a.release(held.pop(int(rng.integers(0, len(held)))))
+            else:
+                n = int(rng.integers(1, 6))
+                if a.reserve(n):
+                    held.append([a.alloc() for _ in range(n)])
+            assert a.n_free + a.n_allocated == a.total
+        # reserve every remaining page against the fragmented list, then
+        # draw them all down: none may fail, none may be handed out twice
+        n = a.available()
+        assert n > 0 and a.reserve(n)
+        got = [a.alloc() for _ in range(n)]
+        live = set(got)
+        for grp in held:
+            live |= set(grp)
+        assert len(got) == n and len(live) == a.n_allocated
+        assert a.n_free == 0 and a.reserved == 0
 
 
 class TestPoolInvariants:
@@ -207,6 +269,32 @@ class TestPoolInvariants:
         assert len(out2) == 2
         assert engine._slot_decode_jit._cache_size() == n0
         assert sched._pool.allocator.n_allocated == 0
+
+    def test_grow_after_fragmentation_keeps_decode_compile(self, engine):
+        """Mixed-length requests retire at different times, scrambling
+        the free list; growing the pool within ``kv_page_capacity``
+        afterwards is pure free-list bookkeeping — no decode recompile —
+        and serving through the fragmented, grown pool still completes
+        with the reservation guarantee intact."""
+        rng = np.random.default_rng(4)
+        sched = Scheduler(engine, batch_size=2, buckets=(16,),
+                          kv_page_size=4, kv_pages=9, kv_page_capacity=24)
+        for length, gen in [(9, 2), (4, 7), (13, 3), (6, 5), (3, 8)]:
+            sched.submit(rng.integers(0, engine.cfg.vocab_size, length),
+                         gen)
+        assert len(sched.run()) == 5
+        pool = sched._pool
+        n0 = engine._slot_decode_jit._cache_size()
+        pool.grow_pages(20)            # within capacity: headroom only
+        assert pool.page_capacity == 24
+        assert engine._slot_decode_jit._cache_size() == n0
+        for length, gen in [(8, 4), (5, 6), (12, 3)]:
+            sched.submit(rng.integers(0, engine.cfg.vocab_size, length),
+                         gen)
+        assert len(sched.run()) == 3
+        assert engine._slot_decode_jit._cache_size() == n0
+        assert pool.allocator.n_allocated == 0
+        assert pool.allocator.n_free == pool.allocator.total == 19
 
     def test_undersized_pool_raises_instead_of_spinning(self, engine):
         """A pool that cannot back even one full slot is rejected up
