@@ -42,7 +42,16 @@ Three sections:
    over the replayed trace (synthetic, or ``--trace-file``), locate the
    hit-rate cliff, and print a recommended ``decode_cache`` capacity —
    the knee: the smallest capacity past the cliff within a small
-   tolerance of the best measured hit rate.
+   tolerance of the best measured hit rate (shared logic with the
+   launcher's ``--cache-mb auto``: ``runtime.autotune.find_knee``).
+
+7. **Telemetry** (``--trace``/``--smoke``): serve a small mix with
+   request-lifecycle tracing on and validate the observability surface
+   end to end — Chrome-trace JSON loads with admitted == retired spans,
+   the Prometheus text parses with monotone counters across scrapes,
+   and tokens are identical to a telemetry-off run.  ``--trace-out`` /
+   ``--metrics-out`` additionally write (and re-validate) the files,
+   which is what the CI smoke job does.
 
 Real traffic traces: ``--trace-file path.jsonl`` replays a recorded
 trace (one JSON object per line: ``arrival_time`` seconds, ``prompt_len``,
@@ -74,6 +83,7 @@ import time
 import numpy as np
 
 from repro.runtime import DecodeTileCache, WeightStore
+from repro.runtime.autotune import DEFAULT_FRACTIONS, find_knee
 
 SAMPLE_TRACE = pathlib.Path(__file__).parent / "traces" / "sample.jsonl"
 
@@ -254,14 +264,15 @@ def autotune_capacity(trace: Trace, policy: str = "freq",
     """Sweep a fine capacity grid over ``trace`` and recommend the
     hit-rate-cliff knee.
 
-    The cliff is the largest hit-rate jump between consecutive
-    capacities (the paper's §IV working-set threshold appearing at
-    serving time); the knee is the smallest capacity whose hit rate is
-    within ``tolerance`` of the best measured rate — everything past it
-    buys memory, not hits.  Returns the recommended capacity in bytes.
+    The cliff/knee logic is shared with the launcher's ``--cache-mb
+    auto`` path (``runtime.autotune.find_knee``): the cliff is the
+    largest hit-rate jump between consecutive capacities (the paper's
+    §IV working-set threshold appearing at serving time); the knee is
+    the smallest capacity at/after it within ``tolerance`` of the best
+    measured rate — everything past it buys memory, not hits.  Returns
+    the recommended capacity in bytes.
     """
-    fractions = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4,
-                 0.5, 0.6, 0.75, 0.9, 1.0)
+    fractions = DEFAULT_FRACTIONS
     total = trace.total_bytes
     caps, rates = [], []
     print(f"capacity autotune ({policy} policy, "
@@ -277,13 +288,7 @@ def autotune_capacity(trace: Trace, policy: str = "freq",
     best = max(rates)
     jumps = [rates[i] - rates[i - 1] for i in range(1, len(rates))]
     cliff = int(np.argmax(jumps)) + 1 if jumps else 0
-    # knee: smallest capacity at/after the cliff whose hit rate is within
-    # tolerance of best; non-monotone replays where nothing past the
-    # cliff qualifies fall back to the best capacity itself, so the
-    # "within tolerance" claim below holds by construction
-    knee = next((i for i in range(cliff, len(rates))
-                 if rates[i] >= best - tolerance),
-                int(np.argmax(rates)))
+    knee = find_knee(caps, rates, tolerance=tolerance)
     print(f"\ncliff: {caps[cliff]} bytes "
           f"(+{jumps[cliff - 1] * 100:.1f} pts over the previous "
           f"capacity)" if jumps else "\nno cliff detected")
@@ -495,6 +500,78 @@ def backend_compare(smoke: bool, seed: int = 0) -> None:
 
 
 # ---------------------------------------------------------------------------
+# telemetry: lifecycle trace + Prometheus export on the real scheduler
+# ---------------------------------------------------------------------------
+
+def telemetry_smoke(smoke: bool, seed: int = 0, trace_out=None,
+                    metrics_out=None) -> None:
+    """Serve a small mix with tracing on and validate the whole
+    observability surface: the Chrome-trace JSON loads and carries
+    exactly one admitted/retired pair per completed request, the
+    Prometheus text parses, counters are monotone across scrapes, and
+    tokens are identical to a telemetry-off run (telemetry must
+    observe, never steer).  With ``trace_out`` / ``metrics_out`` set
+    the artifacts are also written to disk (the CI smoke job does, and
+    re-validates the files)."""
+    from repro.runtime import Scheduler, ServeEngine, Telemetry, parse_prom
+
+    cfg, params = _reduced_lm()
+    rng = np.random.default_rng(seed)
+    n = 5 if smoke else 10
+    reqs = [(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 16))),
+             int(rng.integers(3, 9))) for _ in range(n)]
+    print(f"\ntelemetry: {n} requests, batch 2, chunked prefill, "
+          f"reduced minitron-8b")
+
+    outs = {}
+    for label, tel in (("off", None), ("on", Telemetry(trace=True))):
+        engine = ServeEngine(cfg, params, compress=True, telemetry=tel)
+        sched = Scheduler(engine, batch_size=2, buckets=(32,),
+                          prefill_chunk=4, kv_page_size=8)
+        for prompt, gen in reqs:
+            sched.submit(prompt, gen)
+        done = sched.run()
+        assert len(done) == n
+        outs[label] = tuple(tuple(r.generated)
+                            for r in sorted(done, key=lambda r: r.rid))
+        if tel is None:
+            continue
+        # scrape twice around extra work: every counter must be monotone
+        prom1 = parse_prom(engine.render_prom())
+        engine.cache.get(("nope",))          # one more miss
+        prom2 = parse_prom(engine.render_prom())
+        for key, v1 in prom1.items():
+            name = key[0]
+            if name.endswith(("_total", "_count", "_bucket", "_sum")):
+                assert prom2[key] >= v1, f"counter {key} went backwards"
+        chrome = tel.tracer.chrome()
+        counts: dict = {}
+        for e in chrome["traceEvents"]:
+            counts[e["name"]] = counts.get(e["name"], 0) + 1
+        assert counts.get("admitted") == counts.get("retired") == n, \
+            f"admitted/retired spans != {n}: {counts}"
+        assert counts.get("request") == n
+        if trace_out:
+            tel.tracer.write_chrome(trace_out)
+            with open(trace_out) as f:
+                loaded = json.load(f)
+            assert len(loaded["traceEvents"]) == len(chrome["traceEvents"])
+            print(f"  trace -> {trace_out} "
+                  f"({len(loaded['traceEvents'])} events)")
+        if metrics_out:
+            text = engine.render_prom()
+            parse_prom(text)
+            with open(metrics_out, "w") as f:
+                f.write(text)
+            print(f"  metrics -> {metrics_out} "
+                  f"({len(text.splitlines())} lines)")
+        print(f"  {counts['request']} request span trees, "
+              f"{len(prom2)} prometheus samples, counters monotone")
+    assert outs["on"] == outs["off"], "telemetry changed generated tokens"
+    print("  telemetry on/off token-identical")
+
+
+# ---------------------------------------------------------------------------
 # slot-level continuous batching vs wave mode on the real scheduler
 # ---------------------------------------------------------------------------
 
@@ -587,6 +664,12 @@ def main():
     ap.add_argument("--autotune-policy", choices=list(POLICY_NAMES),
                     default="freq",
                     help="eviction policy the autotune sweep measures")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write the telemetry section's Chrome-trace JSON "
+                         "here (CI validates it re-loads)")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the telemetry section's Prometheus text "
+                         "exposition here (CI validates it re-parses)")
     args = ap.parse_args()
 
     if args.autotune:
@@ -615,6 +698,9 @@ def main():
         slot_vs_wave(smoke=args.smoke, seed=args.seed)
         prefill_compare(smoke=args.smoke, seed=args.seed)
         backend_compare(smoke=args.smoke, seed=args.seed)
+        telemetry_smoke(smoke=args.smoke, seed=args.seed,
+                        trace_out=args.trace_out,
+                        metrics_out=args.metrics_out)
         return
     capacity_sweep(args.steps)
 

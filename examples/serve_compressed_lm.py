@@ -185,3 +185,30 @@ assert mm.kv_prefill_gather_bytes == 0
 print(f"  mixed-step (chunked prefill in-kernel) == monolithic  [OK]  "
       f"(0 KV bytes gathered on the prefill AND decode paths, "
       f"{mm.kv_prefill_gather_bytes_avoided} install bytes avoided)")
+
+# -- observability: lifecycle trace + histograms + Prometheus export --------
+# The same serve with telemetry on: every request gets a span tree
+# (queued -> admitted -> prefill chunks -> decode -> retired) in a
+# Chrome-trace-ready recorder, latencies land in log-bucket histograms,
+# and every counter renders as Prometheus text.  Telemetry observes and
+# never steers: tokens must be identical to every run above.
+from repro.runtime import Telemetry, parse_prom                     # noqa: E402
+
+tel = Telemetry(trace=True)
+engine = ServeEngine(cfg, lm_params, compress=True, telemetry=tel)
+sched = Scheduler(engine, batch_size=2, buckets=(16,),
+                  prefill_chunk=args.prefill_chunk,
+                  kv_page_size=args.kv_page_size)
+rids = [sched.submit(p, g).rid for p, g in reqs]
+done = {r.rid: r for r in sched.run()}
+assert [tuple(done[rid].generated) for rid in rids] == mono_toks
+spans = [e for e in tel.tracer.chrome()["traceEvents"]
+         if e.get("ph") == "X" and e["name"] == "request"]
+assert len(spans) == len(reqs)
+samples = parse_prom(engine.render_prom())
+mt = engine.metrics
+print(f"\n  telemetry: {len(spans)} request span trees, "
+      f"{len(samples)} prometheus samples, tokens unchanged  [OK]")
+print(f"  ttft p50 {mt.ttft_hist.percentile(50) * 1000:.0f} ms, "
+      f"p99 {mt.ttft_hist.percentile(99) * 1000:.0f} ms; "
+      f"phases timed: {sorted(tel.phases)}")

@@ -19,7 +19,22 @@ chunks and decode tokens of every slot ride one ragged batched trace
 per iteration, chunks write straight into the page pools, and the
 serve summary's KV gather counters read zero for prefill *and* decode.
 
+Observability: ``--trace-out trace.json`` records every request's
+lifecycle span tree (queued -> admitted -> prefill chunks -> decode ->
+retired) plus engine phase spans as Chrome-trace JSON — open it in
+``chrome://tracing`` or https://ui.perfetto.dev (``--trace-jsonl``
+additionally dumps the raw events one-per-line).  ``--metrics-out
+metrics.prom`` dumps every serving counter/gauge/histogram in
+Prometheus text-exposition format.  Both are validated before exit
+(span count == completed requests; the .prom text re-parses) and
+neither changes generated tokens.  ``--cache-mb auto`` sweeps the
+materialize access pattern over a capacity grid and serves with the
+recommended hit-rate-cliff knee capacity.
+
   PYTHONPATH=src python -m repro.launch.serve --scale tiny
+  PYTHONPATH=src python -m repro.launch.serve --scale tiny \
+      --trace-out /tmp/trace.json --metrics-out /tmp/metrics.prom \
+      --cache-mb auto
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b \
       --batch 4 --prompt-len 64 --gen 32 --requests 8 --policy freq \
       --prefill-chunk 16 --kv-page-size 16 --attn-backend pallas_paged
@@ -28,6 +43,7 @@ serve summary's KV gather counters read zero for prefill *and* decode.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -38,7 +54,8 @@ from repro.dist import sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import tiny_config
 from repro.models.api import get_model
-from repro.runtime import Scheduler, ServeEngine
+from repro.runtime import (Scheduler, ServeEngine, Telemetry, parse_prom,
+                           recommend_store_capacity)
 from repro.runtime.decode_cache import POLICIES
 
 
@@ -51,10 +68,12 @@ def main():
     ap.add_argument("--requests", type=int, default=0,
                     help="total requests to serve (default: one full batch)")
     ap.add_argument("--scale", choices=["tiny", "full"], default="tiny")
-    ap.add_argument("--cache-mb", type=float, default=None,
+    ap.add_argument("--cache-mb", type=str, default=None,
                     help="decode-tile cache capacity in MiB (omit = "
                          "unbounded; 0 = caching disabled, the no-cache "
-                         "baseline)")
+                         "baseline; 'auto' = sweep the materialize access "
+                         "pattern over a capacity grid and serve with the "
+                         "hit-rate-cliff knee capacity)")
     ap.add_argument("--policy", choices=sorted(POLICIES), default="lru",
                     help="decode-cache eviction policy")
     ap.add_argument("--mode", choices=["continuous", "wave"],
@@ -95,21 +114,52 @@ def main():
     ap.add_argument("--no-compress", action="store_true",
                     help="uncompressed baseline on the same scheduler")
     ap.add_argument("--log-every", type=int, default=16)
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write per-request lifecycle spans + engine phase "
+                         "spans as Chrome-trace JSON to this path (open in "
+                         "chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--trace-jsonl", type=str, default=None,
+                    help="additionally dump the raw trace events as JSONL "
+                         "(one event per line) to this path")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write every serving counter/gauge/histogram in "
+                         "Prometheus text-exposition format to this path")
     args = ap.parse_args()
 
     cfg = tiny_config(args.arch) if args.scale == "tiny" \
         else cfgs.get_config(args.arch)
     mesh = make_host_mesh()
     n_requests = args.requests or args.batch
-    cache_bytes = None if args.cache_mb is None \
-        else int(args.cache_mb * 2 ** 20)
+    cache_auto = args.cache_mb == "auto"
+    cache_bytes = None if args.cache_mb is None or cache_auto \
+        else int(float(args.cache_mb) * 2 ** 20)
+    # trace spans only when a trace sink was asked for; phase histograms
+    # ride along whenever any telemetry output is requested.  The default
+    # (no flags) serves with the zero-cost null recorder.
+    telemetry = Telemetry(trace=bool(args.trace_out or args.trace_jsonl)) \
+        if (args.trace_out or args.trace_jsonl or args.metrics_out) \
+        else None
 
     with shd.use_mesh(mesh):
         params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
         engine = ServeEngine(cfg, params, compress=not args.no_compress,
                              cache_bytes=cache_bytes,
                              cache_policy=args.policy,
-                             prefetch=not args.no_prefetch)
+                             prefetch=not args.no_prefetch,
+                             telemetry=telemetry)
+        if cache_auto:
+            if not engine.compressed:
+                raise SystemExit("--cache-mb auto needs the compressed "
+                                 "path; drop --no-compress")
+            rec = recommend_store_capacity(engine.store, engine.model_id,
+                                           policy=args.policy)
+            engine.cache.capacity_bytes = rec["capacity"]
+            print(f"cache autotune: working set "
+                  f"{rec['working_set'] / 2 ** 20:.2f} MiB -> recommended "
+                  f"capacity {rec['capacity'] / 2 ** 20:.2f} MiB "
+                  f"({rec['fraction']:.2f}x, projected hit rate "
+                  f"{rec['hit_rate'] * 100:.1f}%, best "
+                  f"{rec['best_rate'] * 100:.1f}%)")
         if engine.compressed:
             rep = engine.report
             print(f"weight store: {rep['layers']} compressed MLP tensors, "
@@ -146,6 +196,14 @@ def main():
     ttft = sum(t for t in ttfts if t is not None) / max(len(ttfts), 1)
     print(f"prefill: {m.prefill_s:.2f}s total "
           f"(mean time-to-first-token {ttft * 1000:.0f} ms)")
+    for label, hist, unit in (("ttft", m.ttft_hist, 1000.0),
+                              ("tpot", m.tpot_hist, 1000.0),
+                              ("e2e ", m.e2e_hist, 1000.0)):
+        if hist.n:
+            p50, p90, p99 = hist.percentiles(50, 90, 99)
+            print(f"{label}   : p50 {p50 * unit:.1f} ms | "
+                  f"p90 {p90 * unit:.1f} ms | p99 {p99 * unit:.1f} ms "
+                  f"(n={hist.n})")
     if m.prefill_chunks:
         print(f"chunked prefill: {m.prefill_chunks} chunks of "
               f"<= {args.prefill_chunk} tokens, "
@@ -176,6 +234,30 @@ def main():
             print(f"tile prefetch: {engine.store.prefetch_dispatched} "
                   f"dispatched, {engine.store.prefetch_used} consumed")
     print("sample token ids:", completed[0].generated[:16])
+
+    if telemetry is not None and telemetry.tracing:
+        tr = telemetry.tracer
+        n_spans = sum(1 for e in tr.events
+                      if e["ph"] == "X" and e["name"] == "request")
+        assert n_spans == len(completed), \
+            f"trace has {n_spans} request spans, served {len(completed)}"
+        if args.trace_out:
+            tr.write_chrome(args.trace_out)
+            with open(args.trace_out) as f:
+                loaded = json.load(f)          # self-check: valid JSON
+            print(f"trace: {len(loaded['traceEvents'])} events "
+                  f"({n_spans} request spans) -> {args.trace_out} "
+                  f"(open in chrome://tracing or ui.perfetto.dev)")
+        if args.trace_jsonl:
+            tr.write_jsonl(args.trace_jsonl)
+            print(f"trace events (JSONL) -> {args.trace_jsonl}")
+    if args.metrics_out:
+        text = engine.render_prom()
+        parse_prom(text)                       # self-check: parseable
+        with open(args.metrics_out, "w") as f:
+            f.write(text)
+        print(f"metrics: {len(text.splitlines())} lines of Prometheus "
+              f"text exposition -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

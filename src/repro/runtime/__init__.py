@@ -58,7 +58,22 @@ Compression on BNNs"), module by module:
                        KV gather/scatter bytes moved vs avoided on both
                        the decode and prefill paths (the acceptance
                        signal for the in-kernel backend and the
-                       mixed-step path: both must read 0 moved).
+                       mixed-step path: both must read 0 moved) — plus
+                       latency *distributions*: log-bucket histograms
+                       (TTFT / time-per-output-token / end-to-end /
+                       chunk / step) with p50/p99, windowed stats-line
+                       rates, and Prometheus text export (render_prom).
+  telemetry            the observability layer: per-request lifecycle
+                       span trees (queued -> admitted -> prefill_chunk[i]
+                       -> decode -> retired) exportable as Chrome-trace
+                       JSON / JSONL, phase-timing hooks (timed(phase)),
+                       and the pull-based metrics registry behind
+                       render_prom.  Default is a zero-cost null
+                       recorder; telemetry never changes tokens.
+  autotune             capacity recommendation: replay the materialize
+                       access pattern over a capacity grid, find the
+                       hit-rate-cliff knee (the launcher's
+                       ``--cache-mb auto``).
   ===================  ====================================================
 
 The module <-> paper-structure mapping, with the request lifecycle
@@ -70,20 +85,29 @@ complementary cached mode and serves both from one WeightStore so they stay
 bit-identical (tests/test_runtime.py round-trip).
 """
 
+from repro.runtime.autotune import (find_knee, recommend_store_capacity,
+                                    sweep_store)
 from repro.runtime.decode_cache import (DecodeTileCache, EvictionPolicy,
                                         FrequencyWeightedPolicy, LFUPolicy,
                                         LRUPolicy, make_policy)
 from repro.runtime.metrics import ServeMetrics
 from repro.runtime.scheduler import (PageAllocator, Request, Scheduler,
                                      ServeEngine, Slot, SlotPool)
+from repro.runtime.telemetry import (NULL_TELEMETRY, Histogram,
+                                     MetricsRegistry, NullTelemetry,
+                                     Telemetry, Tracer, parse_prom)
 from repro.runtime.weight_store import StoredLayer, WeightStore
 
 __all__ = [
     "DecodeTileCache",
     "EvictionPolicy",
     "FrequencyWeightedPolicy",
+    "Histogram",
     "LFUPolicy",
     "LRUPolicy",
+    "MetricsRegistry",
+    "NULL_TELEMETRY",
+    "NullTelemetry",
     "PageAllocator",
     "Request",
     "Scheduler",
@@ -92,6 +116,12 @@ __all__ = [
     "Slot",
     "SlotPool",
     "StoredLayer",
+    "Telemetry",
+    "Tracer",
     "WeightStore",
+    "find_knee",
     "make_policy",
+    "parse_prom",
+    "recommend_store_capacity",
+    "sweep_store",
 ]

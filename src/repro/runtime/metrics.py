@@ -38,12 +38,25 @@ pools).  A paged-kernel mixed-step run must report **both** gather
 counters == 0 — those zeros are the acceptance criterion for killing the
 per-step page copies on the decode *and* prefill paths, and tests assert
 them.
+
+Observability: latency *distributions* ride beside the counters —
+log-bucket histograms (``runtime.telemetry.Histogram``) for TTFT, time
+per output token, end-to-end latency, prefill-chunk duration, and
+decode-step duration, with p50/p99 in the stats line.  The periodic
+stats line reports rates over the *last window* (interval-delta
+snapshots via :meth:`ServeMetrics.window`), not lifetime averages; the
+lifetime counters remain for the final summary.  Everything is
+exportable as Prometheus text exposition through
+:meth:`ServeMetrics.render_prom`, including the decode-cache /
+weight-store counters and telemetry phase histograms when provided.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+
+from repro.runtime.telemetry import Histogram, MetricsRegistry
 
 
 def _fmt_bytes(n: float) -> str:
@@ -89,6 +102,18 @@ class ServeMetrics:
     kv_prefill_gather_bytes_avoided: int = 0  # install copies mixed-step
     #                                    prefill skipped vs the oracle
     _t0: float = dataclasses.field(default_factory=time.monotonic)
+    # latency distributions (log-bucket histograms; seconds).  Lifetime
+    # averages hide tails — the paper's wins are distribution claims, so
+    # the stats line and summary report p50/p90/p99 from these.
+    ttft_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    tpot_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    e2e_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    chunk_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    step_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    # interval-snapshot baseline for windowed stats lines (the periodic
+    # line reports rates over the last window, not lifetime averages —
+    # a burst an hour ago must not make the current line look fast)
+    _win: dict = dataclasses.field(default_factory=dict)
 
     # -- recording ---------------------------------------------------------
     def record_admit(self, n_requests: int, dt: float,
@@ -112,6 +137,7 @@ class ServeMetrics:
         self.prefill_chunks += 1
         self.prefill_chunk_tokens += n_tokens
         self.prefill_s += dt
+        self.chunk_hist.record(dt)
         if stalled:
             self.decode_stall_s += dt
 
@@ -147,9 +173,25 @@ class ServeMetrics:
         self.slot_steps += n_tokens
         self.capacity_steps += n_slots
         self.decode_s += dt
+        self.step_hist.record(dt)
 
     def record_completed(self, n_requests: int) -> None:
         self.requests_completed += n_requests
+
+    def record_ttft(self, dt: float) -> None:
+        """Time to first token of one request (submit -> first token)."""
+        self.ttft_hist.record(dt)
+
+    def record_request_done(self, req) -> None:
+        """Retire-time latencies of one finished request: end-to-end
+        (submit -> done) and time-per-output-token (the decode-phase
+        mean: first token -> done over the tokens after the first)."""
+        if req.t_done is None or req.t_submit is None:
+            return
+        self.e2e_hist.record(req.t_done - req.t_submit)
+        if req.t_first is not None and len(req.generated) > 1:
+            self.tpot_hist.record((req.t_done - req.t_first)
+                                  / (len(req.generated) - 1))
 
     # -- derived -----------------------------------------------------------
     def tokens_per_s(self) -> float:
@@ -178,15 +220,49 @@ class ServeMetrics:
         return self.prefill_s / self.prefill_chunks * 1000.0 \
             if self.prefill_chunks else 0.0
 
+    # -- interval windows --------------------------------------------------
+    _RATE_FIELDS = ("tokens_generated", "slot_steps", "decode_steps",
+                    "capacity_steps", "decode_s", "prefill_s",
+                    "requests_completed", "requests_admitted")
+
+    def _sample(self, cache=None) -> dict:
+        snap = {f: getattr(self, f) for f in self._RATE_FIELDS}
+        snap["cache_hits"] = cache.hits if cache is not None else 0
+        snap["cache_misses"] = cache.misses if cache is not None else 0
+        snap["t"] = time.monotonic()
+        return snap
+
+    def window(self, cache=None) -> dict:
+        """Counter deltas since the previous :meth:`window` call (the
+        first window spans the metrics' whole lifetime), and the
+        baseline is advanced — the periodic stats line reports *rates
+        over the last window*, so a burst long past cannot keep the
+        current line looking fast.  Lifetime numbers stay available on
+        the counters themselves for the final summary."""
+        cur = self._sample(cache)
+        delta = {k: cur[k] - self._win.get(k, 0.0 if k == "t" else 0)
+                 for k in cur}
+        if not self._win:
+            delta["t"] = cur["t"] - self._t0
+        self._win.clear()
+        self._win.update(cur)
+        return delta
+
     def stats_line(self, cache=None) -> str:
+        w = self.window(cache)
+        tok_s = w["slot_steps"] / w["decode_s"] if w["decode_s"] > 0 else 0.0
+        ms_step = w["decode_s"] / w["decode_steps"] * 1000.0 \
+            if w["decode_steps"] else 0.0
         parts = [
             f"tokens {self.tokens_generated}",
-            f"{self.tokens_per_s():.1f} tok/s",
-            f"{self.ms_per_token():.1f} ms/step",
+            f"{tok_s:.1f} tok/s",
+            f"{ms_step:.1f} ms/step",
             f"reqs {self.requests_completed}/{self.requests_admitted}",
         ]
-        if self.capacity_steps:
-            parts.append(f"occupancy {self.occupancy() * 100:.0f}%")
+        if w["capacity_steps"]:
+            parts.append(
+                f"occupancy "
+                f"{w['slot_steps'] / w['capacity_steps'] * 100:.0f}%")
         if self.prefill_chunks:
             parts.append(f"chunks {self.prefill_chunks} "
                          f"({self.prefill_chunk_ms():.1f} ms, "
@@ -205,8 +281,84 @@ class ServeMetrics:
                 f"{_fmt_bytes(self.kv_prefill_gather_bytes)} "
                 f"(avoided "
                 f"{_fmt_bytes(self.kv_prefill_gather_bytes_avoided)})")
+        if self.ttft_hist.n:
+            p50, p99 = self.ttft_hist.percentiles(50, 99)
+            parts.append(f"ttft p50 {p50 * 1000:.0f}ms p99 {p99 * 1000:.0f}ms")
+        if self.tpot_hist.n:
+            p50, p99 = self.tpot_hist.percentiles(50, 99)
+            parts.append(f"tpot p50 {p50 * 1000:.1f}ms p99 {p99 * 1000:.1f}ms")
         if cache is not None:
-            parts.append(f"cache hit-rate {cache.hit_rate() * 100:.1f}%")
+            acc = w["cache_hits"] + w["cache_misses"]
+            rate = w["cache_hits"] / acc if acc else cache.hit_rate()
+            parts.append(f"cache hit-rate {rate * 100:.1f}%")
             parts.append(f"streamed {_fmt_bytes(cache.bytes_streamed)}, "
                          f"avoided {_fmt_bytes(cache.bytes_avoided)}")
         return " | ".join(parts)
+
+    # -- pull-based export -------------------------------------------------
+    def registry(self, cache=None, store=None,
+                 telemetry=None) -> MetricsRegistry:
+        """Every serving counter/gauge/histogram — plus the decode-cache,
+        weight-store, and telemetry phase metrics when given — registered
+        by name in a pull-based :class:`MetricsRegistry`."""
+        reg = MetricsRegistry()
+        for field, help_ in (
+                ("tokens_generated", "tokens produced (prefill + decode)"),
+                ("requests_admitted", "requests admitted to a slot"),
+                ("requests_completed", "requests retired"),
+                ("prefills", "monolithic batch-1 prefills"),
+                ("prefill_chunks", "chunked-prefill chunks"),
+                ("prefill_chunk_tokens", "prompt tokens through chunks"),
+                ("decode_steps", "batched decode steps"),
+                ("slot_steps", "decode steps x active slots"),
+                ("capacity_steps", "decode steps x total slots"),
+                ("waves", "wave-mode admission rounds"),
+                ("page_use_steps", "decode steps x pages in use"),
+                ("page_capacity_steps", "decode steps x pool pages"),
+                ("kv_gather_bytes", "decode-path KV gather/scatter bytes"),
+                ("kv_gather_bytes_avoided",
+                 "decode-path KV copies avoided (pallas_paged)"),
+                ("kv_prefill_gather_bytes",
+                 "prefill-path KV install-copy bytes"),
+                ("kv_prefill_gather_bytes_avoided",
+                 "prefill install copies avoided (mixed-step)")):
+            reg.counter(f"{field}_total",
+                        (lambda f=field: getattr(self, f)), help_)
+        reg.counter("prefill_seconds_total", lambda: self.prefill_s,
+                    "wall seconds spent in prefill")
+        reg.counter("decode_seconds_total", lambda: self.decode_s,
+                    "wall seconds spent in decode steps")
+        reg.counter("decode_stall_seconds_total",
+                    lambda: self.decode_stall_s,
+                    "chunk seconds while decode work waited")
+        reg.gauge("pages_in_use", lambda: self.pages_in_use,
+                  "KV pages holding live request state (last step)")
+        reg.gauge("pages_total", lambda: self.pages_total,
+                  "KV page-pool size (last step)")
+        for name, hist, help_ in (
+                ("ttft_seconds", self.ttft_hist, "time to first token"),
+                ("tpot_seconds", self.tpot_hist, "time per output token"),
+                ("e2e_seconds", self.e2e_hist, "request end-to-end latency"),
+                ("prefill_chunk_seconds", self.chunk_hist,
+                 "prefill chunk duration"),
+                ("decode_step_seconds", self.step_hist,
+                 "decode step duration")):
+            reg.histogram(name, hist, help_)
+        if cache is not None:
+            for name, kind, getter, help_ in cache.prom_metrics():
+                getattr(reg, kind)(f"cache_{name}", getter, help_)
+        if store is not None:
+            for name, kind, getter, help_ in store.prom_metrics():
+                getattr(reg, kind)(f"store_{name}", getter, help_)
+        if telemetry is not None:
+            for phase in sorted(telemetry.phases):
+                safe = phase.replace(".", "_").replace("-", "_")
+                reg.histogram(f"phase_{safe}_seconds",
+                              (lambda p=phase: telemetry.phases[p]),
+                              f"wall seconds per {phase} phase")
+        return reg
+
+    def render_prom(self, cache=None, store=None, telemetry=None) -> str:
+        """Prometheus text exposition of :meth:`registry`."""
+        return self.registry(cache=cache, store=store,
+                             telemetry=telemetry).render()

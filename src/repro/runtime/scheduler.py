@@ -85,6 +85,8 @@ from repro.models.api import (ATTN_BACKENDS, cache_layout, get_model,
 from repro.runtime import weight_store as ws_mod
 from repro.runtime.decode_cache import DecodeTileCache, EvictionPolicy
 from repro.runtime.metrics import ServeMetrics
+from repro.runtime.telemetry import (NULL_TELEMETRY, PID_REQUEST,
+                                     Telemetry)
 from repro.runtime.weight_store import WeightStore
 
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
@@ -113,7 +115,9 @@ class Request:
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0                 # monotonic submission time
+    t_admit: float | None = None          # monotonic admission time
     t_first: float | None = None          # monotonic first-token time
+    t_done: float | None = None           # monotonic retire time
 
     @property
     def prompt_len(self) -> int:
@@ -201,6 +205,10 @@ class ServeEngine:
     on the same scheduler.  ``cache_policy`` picks the decode-cache
     eviction policy (``lru`` | ``lfu`` | ``freq`` or an EvictionPolicy
     instance); ``prefetch`` toggles async next-layer tile prefetch.
+    ``telemetry`` accepts a ``runtime.telemetry.Telemetry`` recorder
+    (request-lifecycle spans + phase histograms); the default is the
+    zero-cost null recorder, and telemetry never changes generated
+    tokens (tested).
     """
 
     def __init__(self, cfg, params, *, compress: bool = True,
@@ -208,9 +216,13 @@ class ServeEngine:
                  cluster: bool = False,
                  cache_policy: str | EvictionPolicy | None = None,
                  prefetch: bool = True,
+                 telemetry: Telemetry | None = None,
                  select: Callable[[str, int], bool] = ws_mod.default_select):
         self.cache = DecodeTileCache(cache_bytes, policy=cache_policy)
-        self.store = WeightStore(self.cache, prefetch=prefetch)
+        self.telemetry = telemetry if telemetry is not None \
+            else NULL_TELEMETRY
+        self.store = WeightStore(self.cache, prefetch=prefetch,
+                                 telemetry=self.telemetry)
         self.metrics = ServeMetrics()
         self.model_id = model_id
         self.compressed = False
@@ -356,6 +368,13 @@ class ServeEngine:
     def stats_line(self) -> str:
         return self.metrics.stats_line(self.cache if self.compressed
                                        else None)
+
+    def render_prom(self) -> str:
+        """Prometheus text exposition of every serving metric: the
+        ServeMetrics counters + histograms, the decode-cache and
+        weight-store counters, and any telemetry phase histograms."""
+        return self.metrics.render_prom(cache=self.cache, store=self.store,
+                                        telemetry=self.telemetry)
 
 
 @dataclasses.dataclass
@@ -780,12 +799,15 @@ class SlotPool:
             logits = self.mixed_step(params, toks[:, :, 0], poss, q_lens)
             last = logits[:, -1]                          # (S, V)
         elif self.paged:
+            tel = self.engine.telemetry
             table = jnp.asarray(self.table)
-            views = self._gather(self.pages, self.unpaged, table)
+            with tel.timed("kv_gather"):
+                views = self._gather(self.pages, self.unpaged, table)
             logits, new_tree = self.engine.slot_decode(
                 params, views, jnp.asarray(toks), jnp.asarray(poss))
-            self.pages, self.unpaged = self._scatter_pages(
-                self.pages, new_tree, table)
+            with tel.timed("kv_scatter"):
+                self.pages, self.unpaged = self._scatter_pages(
+                    self.pages, new_tree, table)
             last = logits[:, 0, -1]                       # (S, V)
         else:
             logits, self.cache = self.engine.slot_decode(
@@ -955,16 +977,23 @@ class Scheduler:
         """Serve the queue to completion -> completed requests."""
         if not self._queue:
             return []
+        tel = self.engine.telemetry
         completed: list[Request] = []
         pool = self._ensure_pool()
         while self._queue or pool.busy():
-            self._admit(pool, completed)
+            if self._queue:
+                with tel.timed("admit"):
+                    self._admit(pool, completed)
             if self._mixed_path(pool):
-                self._mixed_tick(pool, completed)
+                with tel.timed("mixed_step"):
+                    self._mixed_tick(pool, completed)
             else:
-                self._prefill_tick(pool, completed)
+                if pool.prefilling():
+                    with tel.timed("prefill"):
+                        self._prefill_tick(pool, completed)
                 if pool.active():
-                    self._step(pool, completed)
+                    with tel.timed("decode"):
+                        self._step(pool, completed)
         return completed
 
     def _mixed_path(self, pool: SlotPool) -> bool:
@@ -977,9 +1006,25 @@ class Scheduler:
         return pool.backend == "pallas_paged" and \
             self.prefill_chunk is not None
 
+    def _trace_admitted(self, req: Request, slot: Slot) -> None:
+        """Close the request's queued span and mark its admission."""
+        req.t_admit = time.monotonic()
+        tr = self.engine.telemetry.tracer
+        if tr.enabled:
+            tr.name_track(PID_REQUEST, req.rid, f"request {req.rid}")
+            tr.complete(PID_REQUEST, req.rid, "queued", req.t_submit,
+                        req.t_admit, prompt_len=req.prompt_len)
+            tr.instant(PID_REQUEST, req.rid, "admitted", req.t_admit,
+                       slot=slot.index, backend=self.attn_backend)
+
     def _record_first_token(self, req: Request, tok: int) -> None:
         req.generated.append(tok)
         req.t_first = time.monotonic()
+        self.engine.metrics.record_ttft(req.t_first - req.t_submit)
+        tr = self.engine.telemetry.tracer
+        if tr.enabled:
+            tr.instant(PID_REQUEST, req.rid, "first_token", req.t_first,
+                       token=tok)
 
     def _start_or_admit(self, pool: SlotPool, req: Request, params,
                         completed: list[Request]) -> None:
@@ -1001,14 +1046,21 @@ class Scheduler:
             # pages/lane — no standalone batch-1 cache exists at all
             slot.pcache = None if self._mixed_path(pool) else \
                 self.engine.fresh_slot_cache(pool.slot_len)
+            self._trace_admitted(req, slot)
             return
         t0 = time.monotonic()
         slot.req = req
+        self._trace_admitted(req, slot)
         tok, cache1 = self.engine.prefill_request(params, req.prompt,
                                                   pool.slot_len)
         pool.install(slot, cache1, tok)
+        t1 = time.monotonic()
+        tr = self.engine.telemetry.tracer
+        if tr.enabled:
+            tr.complete(PID_REQUEST, req.rid, "prefill", t0, t1,
+                        slot=slot.index, tokens=req.prompt_len)
         self._record_first_token(req, tok)
-        m.record_admit(1, time.monotonic() - t0, tokens=1)
+        m.record_admit(1, t1 - t0, tokens=1)
         self._maybe_finish(pool, slot, completed)
 
     def _maybe_finish(self, pool: SlotPool, slot: Slot,
@@ -1016,9 +1068,26 @@ class Scheduler:
         req = slot.req
         if len(req.generated) >= req.max_new_tokens:
             req.done = True
+            req.t_done = time.monotonic()
+            tr = self.engine.telemetry.tracer
+            if tr.enabled:
+                pages = int((pool.table[slot.index] != DUMMY_PAGE).sum()) \
+                    if pool.paged else 0
+                if req.t_first is not None:
+                    tr.complete(PID_REQUEST, req.rid, "decode",
+                                req.t_first, req.t_done, slot=slot.index,
+                                tokens=len(req.generated),
+                                pages_held=pages)
+                tr.complete(PID_REQUEST, req.rid, "request", req.t_submit,
+                            req.t_done, prompt_len=req.prompt_len,
+                            tokens=len(req.generated),
+                            backend=self.attn_backend)
+                tr.instant(PID_REQUEST, req.rid, "retired", req.t_done,
+                           slot=slot.index)
             pool.retire(slot)
             completed.append(req)
             self.engine.metrics.record_completed(1)
+            self.engine.metrics.record_request_done(req)
 
     def _admit(self, pool: SlotPool, completed: list[Request]) -> None:
         m = self.engine.metrics
@@ -1089,6 +1158,11 @@ class Scheduler:
                     params, slot.pcache, chunk, slot.prefill_cursor)
                 dt = time.monotonic() - t0
                 m.record_prefill_chunk(c, dt, stalled=bool(pool.active()))
+                tr = self.engine.telemetry.tracer
+                if tr.enabled:
+                    tr.complete(PID_REQUEST, req.rid, "prefill_chunk",
+                                t0, t0 + dt, slot=slot.index, tokens=c,
+                                cursor=slot.prefill_cursor)
                 slot.prefill_cursor += c
                 spent += c
                 if slot.prefill_cursor >= req.prompt_len:
@@ -1173,9 +1247,16 @@ class Scheduler:
             slot.tok = int(nxt[slot.index])
             slot.req.generated.append(slot.tok)
             self._maybe_finish(pool, slot, completed)
+        tr = self.engine.telemetry.tracer
         for slot, c in chunks:
             m.record_prefill_chunk(c, (dt - dt_decode) / len(chunks),
                                    stalled=bool(active))
+            if tr.enabled:
+                # chunks share one ragged trace; each request's span
+                # covers the tick's prefill share
+                tr.complete(PID_REQUEST, slot.req.rid, "prefill_chunk",
+                            t0, t0 + (dt - dt_decode), slot=slot.index,
+                            tokens=c, cursor=slot.prefill_cursor)
             slot.prefill_cursor += c
             if slot.prefill_cursor >= slot.req.prompt_len:
                 if not finite[slot.index]:

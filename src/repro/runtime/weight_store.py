@@ -50,6 +50,7 @@ from repro.dist.sharding import path_name
 from repro.kernels import ref
 from repro.kernels.huffman_decode import pack_bitplane_tables
 from repro.runtime.decode_cache import DecodeTileCache
+from repro.runtime.telemetry import NULL_TELEMETRY
 
 # serving tiles reuse the offline layout default (C=8 -> 1024 sequences/
 # tile); the tile is also the cache's eviction granularity
@@ -136,11 +137,13 @@ class WeightStore:
     """
 
     def __init__(self, cache: DecodeTileCache | None = None, *,
-                 prefetch: bool = False):
+                 prefetch: bool = False, telemetry=None):
         self.cache = cache if cache is not None else DecodeTileCache()
         self.prefetch = prefetch
         self.prefetch_dispatched = 0
         self.prefetch_used = 0
+        self.telemetry = telemetry if telemetry is not None \
+            else NULL_TELEMETRY
         self._models: dict[str, _ModelEntry] = {}
 
     # -- registration ------------------------------------------------------
@@ -217,11 +220,13 @@ class WeightStore:
                    and (model_id, layer.name, t) not in pending]
         if not missing:
             return                      # steady state: stay off the device
-        tables = jnp.asarray(layer.tables)
-        for t in missing:
-            pending[(model_id, layer.name, t)] = _decode_tile_jit(
-                jnp.asarray(ts.words[t]), tables, ts.c)
-            self.prefetch_dispatched += 1
+        with self.telemetry.timed("weights.prefetch", layer=layer.name,
+                                  tiles=len(missing)):
+            tables = jnp.asarray(layer.tables)
+            for t in missing:
+                pending[(model_id, layer.name, t)] = _decode_tile_jit(
+                    jnp.asarray(ts.words[t]), tables, ts.c)
+                self.prefetch_dispatched += 1
 
     def _fetch_tiles(self, model_id: str, layer: StoredLayer,
                      pending: dict | None = None) -> tuple[list, bool]:
@@ -244,9 +249,10 @@ class WeightStore:
                     self.prefetch_used += 1
                     tile = np.asarray(fut)
                 else:
-                    tile = np.asarray(_decode_tile_jit(
-                        jnp.asarray(ts.words[t]), jnp.asarray(layer.tables),
-                        ts.c))
+                    with self.telemetry.timed("weights.decode_tile"):
+                        tile = np.asarray(_decode_tile_jit(
+                            jnp.asarray(ts.words[t]),
+                            jnp.asarray(layer.tables), ts.c))
                 self.cache.put(key, tile, streamed_bytes=comp_bytes)
                 any_miss = True
             tiles.append(tile)
@@ -285,22 +291,24 @@ class WeightStore:
         names = list(entry.layers)
         pending: dict = {}
         rebuilt: dict = {}
-        for i, name in enumerate(names):
-            stack = entry.layers[name]
-            fetched = [self._fetch_tiles(model_id, l, pending)
-                       for l in stack]
-            if self.prefetch and i + 1 < len(names):
-                for nxt in entry.layers[names[i + 1]]:
-                    self._prefetch_layer(model_id, nxt, pending)
-            if all(not miss for _, miss in fetched) and name in entry.memo:
-                rebuilt[name] = entry.memo[name]
-                continue
-            arrs = [self._to_weights(l, tiles)
-                    for l, (tiles, _) in zip(stack, fetched)]
-            out = jnp.asarray(np.stack(arrs) if entry.stacked[name]
-                              else arrs[0])
-            entry.memo[name] = out
-            rebuilt[name] = out
+        with self.telemetry.timed("weights.materialize", model=model_id):
+            for i, name in enumerate(names):
+                stack = entry.layers[name]
+                fetched = [self._fetch_tiles(model_id, l, pending)
+                           for l in stack]
+                if self.prefetch and i + 1 < len(names):
+                    for nxt in entry.layers[names[i + 1]]:
+                        self._prefetch_layer(model_id, nxt, pending)
+                if all(not miss for _, miss in fetched) \
+                        and name in entry.memo:
+                    rebuilt[name] = entry.memo[name]
+                    continue
+                arrs = [self._to_weights(l, tiles)
+                        for l, (tiles, _) in zip(stack, fetched)]
+                out = jnp.asarray(np.stack(arrs) if entry.stacked[name]
+                                  else arrs[0])
+                entry.memo[name] = out
+                rebuilt[name] = out
 
         def sub(path, leaf):
             return rebuilt.get(path_name(path), leaf)
@@ -354,6 +362,18 @@ class WeightStore:
                 ts = l.ensure_tiled()
                 total += ts.n_tiles * ts.c * ts.s * 4       # int32 tiles
         return total
+
+    def prom_metrics(self) -> list:
+        """(name, kind, getter, help) rows for a pull-based metrics
+        registry (``ServeMetrics.registry`` prefixes them ``store_``)."""
+        return [
+            ("prefetch_dispatched_total", "counter",
+             lambda: self.prefetch_dispatched,
+             "tile decodes dispatched ahead of use"),
+            ("prefetch_used_total", "counter",
+             lambda: self.prefetch_used,
+             "prefetched tile decodes consumed by a miss"),
+        ]
 
     def report(self, model_id: str) -> dict:
         entry = self._models[model_id]
