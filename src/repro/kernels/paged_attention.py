@@ -45,6 +45,14 @@ single shared KV head, and ``v_pages`` is the latent pool itself.
 ``q`` and leave it at 1.0, matching ``attention.decode_attention``'s
 operation order exactly.
 
+Compressed pages (``kv_codec="cluster"``): when ``k_scales``/``v_scales``
+are passed the pools hold int8 codebook indices and each page is decoded
+*in VMEM* right after its DMA — a 256-entry codebook lookup (the same
+one-hot idiom as ``fused_decode_contraction``'s weight-tile decode)
+times the per-(slot, token) scale row that rides its own scalar-prefetch
+BlockSpec — before the online-softmax score ever sees it.  The fp page
+never exists in HBM.
+
 ``interpret=True`` runs the identical kernel through the Pallas
 interpreter on CPU — how CI exercises it (same convention as
 ``fused_decode_matmul``).  Block shapes follow the model's head dims; on
@@ -61,16 +69,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.kv_codec import LEVELS, ZERO_CODE
+
 NEG_INF = -1e30
+
+
+def _dequant(codes, scale_row, cb):
+    """Decode one int8 page in VMEM: codebook lookup * per-token scale.
+
+    ``codes`` (page, KH, D) int8, ``scale_row`` (page,) f32, ``cb``
+    (LEVELS,) f32.  The lookup is a one-hot compare against an iota —
+    TPU-friendly (no gather), identical in shape to the table lookup in
+    ``kernels.huffman_decode.decode_step``.
+    """
+    flat = codes.reshape(-1, 1).astype(jnp.int32) + ZERO_CODE
+    sel = flat == jax.lax.broadcasted_iota(
+        jnp.int32, (flat.shape[0], LEVELS), 1)
+    vals = jnp.where(sel, cb[None, :], 0.0).sum(-1).reshape(codes.shape)
+    return vals * scale_row.reshape(-1, 1, 1)
 
 
 def _kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest,
             page: int, kh: int, g: int, qb: int, window: int,
-            softcap_val: float, scale: float, has_q2: bool):
+            softcap_val: float, scale: float, has_q2: bool,
+            has_codec: bool):
+    n = 0
     if has_q2:
-        q2_ref, k2_ref, o_ref, m_ref, l_ref, acc_ref = rest
-    else:
-        o_ref, m_ref, l_ref, acc_ref = rest
+        q2_ref, k2_ref = rest[:2]
+        n = 2
+    if has_codec:
+        ks_ref, vs_ref = rest[n:n + 2]
+        n += 2
+        if has_q2:
+            k2s_ref = rest[n]
+            n += 1
+        cb_ref = rest[n]
+        n += 1
+    o_ref, m_ref, l_ref, acc_ref = rest[n:]
     s_idx = pl.program_id(0)
     qb_idx = pl.program_id(1)
     j = pl.program_id(2)
@@ -81,15 +116,26 @@ def _kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # ---- decode this page's operands (in-kernel, codec path) -------------
+    if has_codec:
+        cb = cb_ref[0]
+        k = _dequant(k_ref[0], ks_ref[0], cb)             # (page, KH, D)
+        v = _dequant(v_ref[0], vs_ref[0], cb)             # (page, KH, Dv)
+    else:
+        k = k_ref[0].astype(jnp.float32)                  # (page, KH, D)
+        v = v_ref[0].astype(jnp.float32)                  # (page, KH, Dv)
+
     # ---- one page of scores: (KH, G, qb, page) f32 -----------------------
     q = q_ref[0].astype(jnp.float32).reshape(qb, kh, g, q_ref.shape[-1])
-    k = k_ref[0].astype(jnp.float32)                      # (page, KH, D)
     s = jnp.einsum("qkgd,pkd->kgqp", q, k)
     if has_q2:
         q2 = q2_ref[0].astype(jnp.float32).reshape(
             qb, kh, g, q2_ref.shape[-1])
-        s = s + jnp.einsum("qkgd,pkd->kgqp", q2,
-                           k2_ref[0].astype(jnp.float32))
+        if has_codec:
+            k2 = _dequant(k2_ref[0], k2s_ref[0], cb)
+        else:
+            k2 = k2_ref[0].astype(jnp.float32)
+        s = s + jnp.einsum("qkgd,pkd->kgqp", q2, k2)
     if scale != 1.0:
         s = s * scale
     if softcap_val:
@@ -118,7 +164,7 @@ def _kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest,
     p = jnp.exp(s - m_new[..., None])
     l_ref[...] = (l_ref[...].reshape(kh, g, qb) * alpha
                   + p.sum(-1)).reshape(kh, g * qb)
-    pv = jnp.einsum("kgqp,pkv->kgqv", p, v_ref[0].astype(jnp.float32))
+    pv = jnp.einsum("kgqp,pkv->kgqv", p, v)
     acc_ref[...] = acc_ref[...] * alpha.reshape(kh * g * qb, 1) \
         + pv.reshape(kh * g * qb, -1)
     m_ref[...] = m_new.reshape(kh, g * qb)
@@ -142,6 +188,10 @@ def paged_mixed_attention(
     q_lens: jax.Array,       # (S,) int32 real query tokens per slot (<= Q)
     q2: jax.Array | None = None,        # (S, Q, H, D2) MLA rope-part queries
     k2_pages: jax.Array | None = None,  # (n_pages, page, KH, D2)
+    k_scales: jax.Array | None = None,   # (n_pages, page) f32 codec scales
+    v_scales: jax.Array | None = None,   # (n_pages, page) f32 codec scales
+    k2_scales: jax.Array | None = None,  # (n_pages, page) f32 codec scales
+    codebook: jax.Array | None = None,   # (LEVELS,) f32 cluster centroids
     *,
     window: int = 0,
     softcap_val: float = 0.0,
@@ -159,6 +209,12 @@ def paged_mixed_attention(
     oracles in tests); the cache copy just never happens.  Rows beyond
     ``q_lens[s]`` are padding: their output is finite garbage the caller
     must ignore.
+
+    When ``k_scales`` is given (``kv_codec="cluster"``) the K/V pools —
+    and ``k2_pages`` if present — hold int8 ``kv_codec`` codes; each
+    page is decoded in VMEM against ``codebook`` and its per-token
+    scale row before scoring.  Equivalent to decoding the whole pool
+    up front, without ever materialising the fp pool.
     """
     s_n, qn, h, d = q.shape
     n_pages, page, kh, dk = k_pages.shape
@@ -187,6 +243,18 @@ def paged_mixed_attention(
                          lambda s, qi, j, t, ln, ql: (t[s, j], 0, 0, 0)),
         ]
         args += [q2, k2_pages]
+    if k_scales is not None:
+        # one scale row per physical page, walked through the page table
+        # exactly like the pools themselves
+        sspec = pl.BlockSpec((1, page), lambda s, qi, j, t, ln, ql: (t[s, j], 0))
+        in_specs += [sspec, sspec]
+        args += [k_scales.astype(jnp.float32), v_scales.astype(jnp.float32)]
+        if q2 is not None:
+            in_specs += [sspec]
+            args += [k2_scales.astype(jnp.float32)]
+        in_specs += [pl.BlockSpec((1, LEVELS),
+                                  lambda s, qi, j, t, ln, ql: (0, 0))]
+        args += [jnp.asarray(codebook, jnp.float32).reshape(1, LEVELS)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -203,7 +271,8 @@ def paged_mixed_attention(
     return pl.pallas_call(
         functools.partial(_kernel, page=page, kh=kh, g=g, qb=qb,
                           window=window, softcap_val=softcap_val,
-                          scale=scale, has_q2=q2 is not None),
+                          scale=scale, has_q2=q2 is not None,
+                          has_codec=k_scales is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((s_n, qn, h, dv), jnp.float32),
         compiler_params=pltpu.TPUCompilerParams(
@@ -221,6 +290,10 @@ def paged_decode_attention(
     lengths: jax.Array,      # (S,) int32   valid positions per slot
     q2: jax.Array | None = None,
     k2_pages: jax.Array | None = None,
+    k_scales: jax.Array | None = None,
+    v_scales: jax.Array | None = None,
+    k2_scales: jax.Array | None = None,
+    codebook: jax.Array | None = None,
     *,
     window: int = 0,
     softcap_val: float = 0.0,
@@ -234,6 +307,7 @@ def paged_decode_attention(
         q[:, None], k_pages, v_pages, table, lengths,
         jnp.ones((q.shape[0],), jnp.int32),
         None if q2 is None else q2[:, None], k2_pages,
+        k_scales, v_scales, k2_scales, codebook,
         window=window, softcap_val=softcap_val, scale=scale,
         interpret=interpret)
     return out[:, 0]

@@ -18,6 +18,11 @@ token-identical).  Combining ``--attn-backend pallas_paged`` with
 chunks and decode tokens of every slot ride one ragged batched trace
 per iteration, chunks write straight into the page pools, and the
 serve summary's KV gather counters read zero for prefill *and* decode.
+``--kv-codec cluster`` stores the page pools as int8 codebook codes plus
+per-token scales (decoded in-kernel under ``pallas_paged``, at gather
+under ``gathered``) — ~4x resident-KV compression at a reported
+reconstruction-error bound, with the at-rest Huffman ratio of the
+resident codes printed in the summary.
 
 Observability: ``--trace-out trace.json`` records every request's
 lifecycle span tree (queued -> admitted -> prefill chunks -> decode ->
@@ -109,6 +114,14 @@ def main():
                          "or pallas_paged (in-kernel paged attention, "
                          "zero per-step cache copies; needs "
                          "--kv-page-size)")
+    ap.add_argument("--kv-codec", choices=["none", "cluster"],
+                    default="none",
+                    help="KV page-pool codec: none (fp pages, bit-exact) "
+                         "or cluster (pages stored as int8 codebook codes "
+                         "+ per-token scales, decoded in-kernel / at "
+                         "gather; ~4x resident-KV compression at a "
+                         "bounded reconstruction error; needs "
+                         "--kv-page-size)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable async next-layer tile prefetch")
     ap.add_argument("--no-compress", action="store_true",
@@ -176,6 +189,7 @@ def main():
                           kv_page_size=args.kv_page_size,
                           kv_pages=args.kv_pages,
                           attn_backend=args.attn_backend,
+                          kv_codec=args.kv_codec,
                           log_every=args.log_every)
         rng = np.random.default_rng(0)
         for _ in range(n_requests):
@@ -223,6 +237,27 @@ def main():
               f"installing prefilled caches, "
               f"{m.kv_prefill_gather_bytes_avoided} avoided by "
               f"mixed-step in-pool prefill")
+    if args.kv_codec == "cluster":
+        pool = sched._pool
+        print(f"kv codec (cluster): page {pool.page_bytes_fp} fp bytes -> "
+              f"{pool.page_bytes_resident} resident bytes "
+              f"({m.kv_capacity_multiplier():.2f}x effective capacity, "
+              f"{m.kv_bytes_avoided} resident bytes avoided)")
+        print(f"kv codec error bound: {m.kv_codec_error_bound:.3e} "
+              f"(max per-token scale / 254)")
+        # at-rest Huffman layer over the resident int8 codes (report
+        # only — the pool itself stays raw int8 for in-kernel decode)
+        codes = (jax.tree_util.tree_leaves(pool.kcache)
+                 if pool.backend == "pallas_paged" else pool.pages)
+        codes = [np.asarray(c) for c in codes if c.dtype == np.int8]
+        if codes:
+            from repro.kernels import kv_codec as kvc
+            rep = kvc.huffman_report(
+                np.concatenate([c.ravel() for c in codes]))
+            print(f"kv codec at-rest huffman: {rep['avg_bits']:.2f} "
+                  f"bits/code ({rep['ratio']:.2f}x vs int8), clustered "
+                  f"{rep['clustered_avg_bits']:.2f} bits "
+                  f"({rep['clustered_ratio']:.2f}x)")
     if engine.compressed:
         st = engine.cache.stats()
         print(f"decode-tile cache ({st['policy']}): {st['hits']} hits / "

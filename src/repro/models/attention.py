@@ -367,7 +367,11 @@ def attn_apply(
     paged: PagedContext | None = None,
     q_lens: jax.Array | None = None,  # (B,) real tokens per lane (ragged
     #                                    mixed step; None = all real)
+    scales: dict | None = None,       # kv_codec="cluster": {"k","v"} scale
+    #                                    pools (n_pages, page) f32; implies
+    #                                    paged + int8 code pools
 ) -> tuple[jax.Array, dict | None]:
+    """-> (y, new_cache); with ``scales`` -> (y, new_cache, new_scales)."""
     b, s, _ = x.shape
     window = cfg.window if kind in ("swa", "local") else 0
     causal = kind != "bidir"
@@ -389,15 +393,32 @@ def attn_apply(
               else jnp.asarray(q_lens, jnp.int32))
         positions = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
         q, k, v = _qkv(p, x, cfg, positions)
+        hd = cfg.head_dim
+        kw = {}
+        if scales is not None:
+            # kv_codec="cluster": quantize this step's K/V onto the
+            # codebook (one scale per (slot, token)), scatter the int8
+            # codes + scale rows, and let the kernel decode each page in
+            # VMEM — the fp cache never exists.
+            from repro.kernels import kv_codec
+            k, k_sc = kv_codec.encode(k, axes=(-2, -1))
+            v, v_sc = kv_codec.encode(v, axes=(-2, -1))
+            new_scales = {"k": paged.write(scales["k"], k_sc, pos, q_lens),
+                          "v": paged.write(scales["v"], v_sc, pos, q_lens)}
+            kw = dict(k_scales=new_scales["k"], v_scales=new_scales["v"],
+                      codebook=kv_codec.codebook())
         k_pool = paged.write(cache["k"], k, pos, q_lens)
         v_pool = paged.write(cache["v"], v, pos, q_lens)
-        hd = cfg.head_dim
         out = paged_mixed_attention(
             (q.astype(jnp.float32) * hd ** -0.5), k_pool, v_pool,
             paged.table, pos + ql, ql, window=window,
-            softcap_val=cfg.attn_logit_softcap, interpret=paged.interpret)
+            softcap_val=cfg.attn_logit_softcap, interpret=paged.interpret,
+            **kw)
         y = out.reshape(b, s, -1).astype(x.dtype) @ p["wo"]
-        return y, {"k": k_pool, "v": v_pool}
+        new_cache = {"k": k_pool, "v": v_pool}
+        if scales is not None:
+            return y, new_cache, new_scales
+        return y, new_cache
 
     if chunked:
         # chunked prefill / mixed lane step: 1..s tokens per lane at
@@ -532,7 +553,9 @@ def mla_init(key, cfg, dtype) -> dict:
     }
 
 
-def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None, q_lens=None):
+def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None, q_lens=None,
+              scales=None):
+    """-> (y, new_cache); with ``scales`` -> (y, new_cache, new_scales)."""
     b, s, d = x.shape
     h = cfg.num_heads
     r_kv = cfg.kv_lora_rank
@@ -568,6 +591,21 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None, q_lens=None):
         pos = jnp.asarray(pos, jnp.int32)
         ql = (jnp.full((b,), s, jnp.int32) if q_lens is None
               else jnp.asarray(q_lens, jnp.int32))
+        kw = {}
+        if scales is not None:
+            # kv_codec="cluster" over the latent pools: the latent (c_kv)
+            # doubles as key and value so its scale pool rides both
+            # operands; the rope part (k_pe) is the second-score operand.
+            from repro.kernels import kv_codec
+            c_kv, c_sc = kv_codec.encode(c_kv, axes=(-1,))
+            k_pe, pe_sc = kv_codec.encode(k_pe, axes=(-1,))
+            new_scales = {
+                "c_kv": paged.write(scales["c_kv"], c_sc, pos, q_lens),
+                "k_pe": paged.write(scales["k_pe"], pe_sc, pos, q_lens)}
+            kw = dict(k_scales=new_scales["c_kv"],
+                      v_scales=new_scales["c_kv"],
+                      k2_scales=new_scales["k_pe"],
+                      codebook=kv_codec.codebook())
         c_pool = paged.write(cache["c_kv"], c_kv, pos, q_lens)
         pe_pool = paged.write(cache["k_pe"], k_pe, pos, q_lens)
         w_uk = p["w_uk"].reshape(r_kv, h, dn)
@@ -577,12 +615,15 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None, q_lens=None):
             q_lat, c_pool[:, :, None], c_pool[:, :, None],
             paged.table, pos + ql, ql,
             q_pe.astype(jnp.float32), pe_pool[:, :, None],
-            scale=(dn + dr) ** -0.5, interpret=paged.interpret)
+            scale=(dn + dr) ** -0.5, interpret=paged.interpret, **kw)
         w_uv = p["w_uv"].reshape(r_kv, h, dv)
         out = jnp.einsum("bshr,rhv->bshv", ctx,
                          w_uv.astype(jnp.float32))        # (B, S, H, dv)
         y = out.reshape(b, s, h * dv).astype(x.dtype) @ p["wo"]
-        return y, {"c_kv": c_pool, "k_pe": pe_pool}
+        new_cache = {"c_kv": c_pool, "k_pe": pe_pool}
+        if scales is not None:
+            return y, new_cache, new_scales
+        return y, new_cache
 
     if decode:
         c_cache = jax.lax.dynamic_update_slice(

@@ -82,17 +82,22 @@ def block_init(kind: str, cfg, key, dtype) -> dict:
 
 def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
                 cache=None, pos=None, prefix_len: int = 0, enc_out=None,
-                paged=None, q_lens=None):
-    """-> (x, new_cache, aux_loss).
+                paged=None, q_lens=None, scales=None):
+    """-> (x, new_cache, aux_loss); with ``scales`` ->
+    (x, new_cache, new_scales, aux_loss).
 
     ``paged`` (an ``attention.PagedContext``) is only passed on mixed /
     decode steps of the ``pallas_paged`` backend, and only for blocks
     whose cache leaves are page pools; lane-backed blocks receive
     ``paged=None`` and run the gathered reference path.  ``q_lens``
     carries the ragged per-slot token counts of a mixed step (None =
-    every token is real).
+    every token is real).  ``scales`` carries this block's
+    ``kv_codec="cluster"`` scale pools (same keys as the cache leaves,
+    ``(n_pages, page)`` f32 each) and implies the cache leaves hold int8
+    codes; only attention blocks can receive it.
     """
     aux = jnp.zeros((), jnp.float32)
+    new_scales = None
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
 
     if kind == "ssm":
@@ -104,15 +109,23 @@ def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
         y, new_cache = rglru_mod.rglru_apply(p["mixer"], h, cfg,
                                              cache=cache, pos=pos)
     elif kind in MLA_KINDS:
-        y, new_cache = attn.mla_apply(p["attn"], h, cfg, cache=cache,
-                                      pos=pos, paged=paged, q_lens=q_lens)
+        res = attn.mla_apply(p["attn"], h, cfg, cache=cache, pos=pos,
+                             paged=paged, q_lens=q_lens, scales=scales)
+        if scales is not None:
+            y, new_cache, new_scales = res
+        else:
+            y, new_cache = res
     else:
         self_cache = cache.get("self") if isinstance(cache, dict) and \
             "self" in (cache or {}) else cache
-        y, new_self = attn.attn_apply(
+        res = attn.attn_apply(
             p["attn"], h, cfg, kind=_attn_kind(kind), cache=self_cache,
-            pos=pos, prefix_len=prefix_len, paged=paged, q_lens=q_lens)
-        new_cache = new_self
+            pos=pos, prefix_len=prefix_len, paged=paged, q_lens=q_lens,
+            scales=scales)
+        if scales is not None:
+            y, new_cache, new_scales = res
+        else:
+            y, new_cache = res
     if cfg.post_norms:
         y = rms_norm(p["post_ln1"], y, cfg.norm_eps)
     x = x + y
@@ -140,6 +153,8 @@ def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
         if cfg.post_norms:
             y2 = rms_norm(p["post_ln2"], y2, cfg.norm_eps)
         x = x + y2
+    if scales is not None:
+        return x, new_cache, new_scales, aux
     return x, new_cache, aux
 
 
@@ -288,7 +303,7 @@ def loss_fn(cfg, params, batch) -> jax.Array:
 
 
 def _run_stack(cfg, params, cache, x, *, pos=None, prefix_len: int = 0,
-               flags=None, ctx=None, q_lens=None):
+               flags=None, ctx=None, q_lens=None, scales=None):
     """One pass through prefix + scan + suffix blocks, threading the cache.
 
     The single block walker behind :func:`prefill`,
@@ -297,7 +312,12 @@ def _run_stack(cfg, params, cache, x, *, pos=None, prefix_len: int = 0,
     attached, and which logits are kept.  ``flags``/``ctx`` carry the
     per-leaf pageability mask + ``attention.PagedContext`` of a paged
     mixed step (None = gathered/lane serving); ``q_lens`` the ragged
-    per-slot token counts.
+    per-slot token counts.  ``scales`` is the ``kv_codec="cluster"``
+    scale-pool tree mirroring ``cache``'s block structure (None at
+    non-pageable blocks).
+
+    Returns ``(x, new_cache, new_scales)``; ``new_scales`` is None
+    unless ``scales`` was passed.
     """
     def block_ctx(f):
         if f is None:
@@ -307,52 +327,91 @@ def _run_stack(cfg, params, cache, x, *, pos=None, prefix_len: int = 0,
             "mixed paged/lane cache leaves within one block"
         return ctx if leaves and all(leaves) else None
 
+    def norm_sc(b):
+        # a block's scales subtree is "real" iff any leaf is an array;
+        # lane-backed blocks carry per-leaf Nones (the canonical scale
+        # tree mirrors the cache treedef position-for-position) and run
+        # without scales
+        if b is None:
+            return None
+        flat = jax.tree_util.tree_flatten(
+            b, is_leaf=lambda v: v is None)[0]
+        return b if any(v is not None for v in flat) else None
+
+    def apply(x, kind, p, c, pg, sc):
+        # normalise block_apply's with/without-scales return arity
+        if sc is None:
+            x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos,
+                                   prefix_len=prefix_len, paged=pg,
+                                   q_lens=q_lens)
+            return x, nc, None
+        x, nc, nsc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos,
+                                    prefix_len=prefix_len, paged=pg,
+                                    q_lens=q_lens, scales=sc)
+        return x, nc, nsc
+
     new_cache = {"prefix": [], "suffix": []}
+    new_scales = None if scales is None else {"prefix": [], "suffix": []}
     for i, (kind, p, c) in enumerate(zip(cfg.prefix_kinds,
                                          params["prefix"],
                                          cache["prefix"])):
-        x, nc, _ = block_apply(
-            kind, cfg, p, x, cache=c, pos=pos, prefix_len=prefix_len,
-            paged=block_ctx(flags["prefix"][i] if flags else None),
-            q_lens=q_lens)
+        sc_blk = scales["prefix"][i] if scales is not None else None
+        x, nc, nsc = apply(
+            x, kind, p, c,
+            block_ctx(flags["prefix"][i] if flags else None),
+            norm_sc(sc_blk))
         new_cache["prefix"].append(nc)
+        if new_scales is not None:
+            new_scales["prefix"].append(nsc if nsc is not None else sc_blk)
 
     if cfg.scan_repeats:
         pgs = [block_ctx(flags["scan"][f"b{i}"] if flags else None)
                for i in range(len(cfg.scan_pattern))]
 
         def body(x, xs):
-            layer_params, layer_cache = xs
-            ncs = {}
+            layer_params, layer_cache, layer_scales = xs
+            ncs, nscs = {}, {}
             for i, kind in enumerate(cfg.scan_pattern):
-                x, nc, _ = block_apply(kind, cfg, layer_params[f"b{i}"], x,
-                                       cache=layer_cache[f"b{i}"], pos=pos,
-                                       prefix_len=prefix_len, paged=pgs[i],
-                                       q_lens=q_lens)
+                sc_blk = (layer_scales[f"b{i}"]
+                          if layer_scales is not None else None)
+                x, nc, nsc = apply(
+                    x, kind, layer_params[f"b{i}"], layer_cache[f"b{i}"],
+                    pgs[i], norm_sc(sc_blk))
                 ncs[f"b{i}"] = nc
-            return x, ncs
+                nscs[f"b{i}"] = nsc if nsc is not None else sc_blk
+            return x, (ncs, nscs)
 
-        x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+        x, (scan_cache, scan_scales) = jax.lax.scan(
+            body, x, (params["scan"], cache["scan"],
+                      scales["scan"] if scales is not None else None))
         new_cache["scan"] = scan_cache
+        if new_scales is not None:
+            new_scales["scan"] = scan_scales
     else:
         new_cache["scan"] = {}
+        if new_scales is not None:
+            new_scales["scan"] = {}
 
     for i, (kind, p, c) in enumerate(zip(cfg.suffix_kinds,
                                          params["suffix"],
                                          cache["suffix"])):
-        x, nc, _ = block_apply(
-            kind, cfg, p, x, cache=c, pos=pos, prefix_len=prefix_len,
-            paged=block_ctx(flags["suffix"][i] if flags else None),
-            q_lens=q_lens)
+        sc_blk = scales["suffix"][i] if scales is not None else None
+        x, nc, nsc = apply(
+            x, kind, p, c,
+            block_ctx(flags["suffix"][i] if flags else None),
+            norm_sc(sc_blk))
         new_cache["suffix"].append(nc)
-    return x, new_cache
+        if new_scales is not None:
+            new_scales["suffix"].append(nsc if nsc is not None else sc_blk)
+    return x, new_cache, new_scales
 
 
 def prefill(cfg, params, tokens, cache, *, vision_embeds=None):
     """Run the full prompt, returning (last-token logits, filled cache)."""
     prefix_len = vision_embeds.shape[1] if vision_embeds is not None else 0
     x = _embed(cfg, params, tokens, vision_embeds)
-    x, new_cache = _run_stack(cfg, params, cache, x, prefix_len=prefix_len)
+    x, new_cache, _ = _run_stack(cfg, params, cache, x,
+                                 prefix_len=prefix_len)
     x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     logits = _unembed(cfg, params, x)
     return logits, new_cache
@@ -384,7 +443,7 @@ def prefill_chunk(cfg, params, cache, tokens, pos):
     them off.
     """
     x = _embed_step(cfg, params, tokens)
-    x, new_cache = _run_stack(cfg, params, cache, x, pos=pos)
+    x, new_cache, _ = _run_stack(cfg, params, cache, x, pos=pos)
     x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     return _unembed(cfg, params, x), new_cache
 
@@ -396,14 +455,14 @@ def decode_step(cfg, params, cache, tokens, pos):
     for VLM archs).
     """
     x = _embed_step(cfg, params, tokens)
-    x, new_cache = _run_stack(cfg, params, cache, x, pos=pos)
+    x, new_cache, _ = _run_stack(cfg, params, cache, x, pos=pos)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     return _unembed(cfg, params, x), new_cache
 
 
 def mixed_step(cfg, params, cache, table, tokens, poss, q_lens, *,
                paged_flags: tuple, page_size: int,
-               interpret: bool = False):
+               interpret: bool = False, scales=None):
     """One mixed serving step for *every* slot straight over the paged KV
     pools: slot ``s`` contributes ``q_lens[s]`` consecutive tokens — a
     prefill chunk, a single decode token, or nothing (``0``, a free lane)
@@ -437,6 +496,10 @@ def mixed_step(cfg, params, cache, table, tokens, poss, q_lens, *,
     leaf's shape and dtype).  Logits of padded rows (``i >= q_lens[s]``)
     are garbage the caller ignores; a slot's next token comes from row
     ``q_lens[s] - 1``.
+
+    ``scales`` (``kv_codec="cluster"``): the per-block scale-pool tree —
+    pageable leaves hold int8 codebook codes, decoded in-kernel — and
+    the return grows to ``(logits, new_cache, new_scales)``.
     """
     specs = init_cache_specs(cfg, 1, page_size)
     flags = jax.tree_util.tree_unflatten(
@@ -444,7 +507,10 @@ def mixed_step(cfg, params, cache, table, tokens, poss, q_lens, *,
     ctx = attn.PagedContext(table=table, page_size=page_size,
                             interpret=interpret)
     x = _embed_step(cfg, params, tokens)
-    x, new_cache = _run_stack(cfg, params, cache, x, pos=poss, flags=flags,
-                              ctx=ctx, q_lens=q_lens)
+    x, new_cache, new_scales = _run_stack(cfg, params, cache, x, pos=poss,
+                                          flags=flags, ctx=ctx,
+                                          q_lens=q_lens, scales=scales)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if scales is not None:
+        return _unembed(cfg, params, x), new_cache, new_scales
     return _unembed(cfg, params, x), new_cache

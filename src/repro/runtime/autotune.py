@@ -36,13 +36,18 @@ def find_knee(capacities, rates, tolerance: float = 0.02) -> int:
     Non-monotone curves where nothing past the cliff qualifies fall
     back to the best capacity itself, so the returned index always
     satisfies ``rates[i] >= max(rates) - tolerance``.
+
+    Ties between equal-size jumps break toward the *latest* one: on a
+    staircase curve (several equal jumps), the working-set cliff is the
+    last riser — picking the first would return a capacity still inside
+    the thrashing region.
     """
     if len(capacities) != len(rates) or not rates:
         raise ValueError("need equal-length, non-empty capacity/rate lists")
     best = max(rates)
     best_i = max(range(len(rates)), key=lambda i: rates[i])
     jumps = [rates[i] - rates[i - 1] for i in range(1, len(rates))]
-    cliff = max(range(len(jumps)), key=lambda i: jumps[i]) + 1 \
+    cliff = max(range(len(jumps)), key=lambda i: (jumps[i], i)) + 1 \
         if jumps else 0
     return next((i for i in range(cliff, len(rates))
                  if rates[i] >= best - tolerance), best_i)
@@ -64,9 +69,15 @@ def sweep_store(store, model_id: str, *, steps: int = 8,
     layers = [(name, layer, layer.ensure_tiled())
               for name, stack in store.layers(model_id).items()
               for layer in stack]
+    # tiny models round int(working_set * frac) below a single decoded
+    # tile (even to 0), making the low-fraction sweep points degenerate
+    # caches that can never hold anything — clamp every capacity to the
+    # largest decoded tile so each point can at least cache one tile
+    min_cap = max((ts.c * ts.s * 4 for _, _, ts in layers), default=1)
     caps, rates = [], []
     for frac in fractions:
-        cache = DecodeTileCache(int(working_set * frac), policy=policy)
+        cap = max(int(working_set * frac), min_cap)
+        cache = DecodeTileCache(cap, policy=policy)
         for name, layer, ts in layers:
             if layer.tile_freq is not None:
                 for t in range(ts.n_tiles):
@@ -80,7 +91,7 @@ def sweep_store(store, model_id: str, *, steps: int = 8,
                     cache.get_or_decode((model_id, layer.name, t),
                                         lambda: True, nbytes=nbytes,
                                         streamed_bytes=streamed)
-        caps.append(int(working_set * frac))
+        caps.append(cap)
         rates.append(cache.hit_rate())
     return caps, rates
 

@@ -101,6 +101,16 @@ class ServeMetrics:
     #                                    straight into the pools)
     kv_prefill_gather_bytes_avoided: int = 0  # install copies mixed-step
     #                                    prefill skipped vs the oracle
+    kv_codec_bytes_fp: int = 0         # per-step resident page bytes the
+    #                                    pool would hold uncompressed
+    #                                    (kv_codec="cluster" only)
+    kv_codec_bytes_resident: int = 0   # per-step resident page bytes the
+    #                                    codec pool actually holds (int8
+    #                                    codes + per-token f32 scales)
+    kv_bytes_avoided: int = 0          # fp - resident: HBM bytes the KV
+    #                                    codec kept out of the pool
+    kv_codec_error_bound: float = 0.0  # worst elementwise reconstruction
+    #                                    error bound seen (max scale / 254)
     _t0: float = dataclasses.field(default_factory=time.monotonic)
     # latency distributions (log-bucket histograms; seconds).  Lifetime
     # averages hide tails — the paper's wins are distribution claims, so
@@ -165,6 +175,27 @@ class ServeMetrics:
         were written straight into the pools (``avoided``)."""
         self.kv_prefill_gather_bytes += moved
         self.kv_prefill_gather_bytes_avoided += avoided
+
+    def record_kv_codec(self, fp_bytes: int, resident_bytes: int) -> None:
+        """Resident KV pool bytes after one decode step under
+        ``kv_codec="cluster"``: what the live pages would weigh at fp
+        (``fp_bytes``) vs what the compressed pool actually holds
+        (``resident_bytes``); the difference accumulates into
+        ``kv_bytes_avoided``."""
+        self.kv_codec_bytes_fp += fp_bytes
+        self.kv_codec_bytes_resident += resident_bytes
+        self.kv_bytes_avoided += fp_bytes - resident_bytes
+
+    def record_kv_codec_error(self, bound: float) -> None:
+        """Worst-case elementwise KV reconstruction error bound of the
+        resident pool (monotone max across runs)."""
+        self.kv_codec_error_bound = max(self.kv_codec_error_bound, bound)
+
+    def kv_capacity_multiplier(self) -> float:
+        """Effective-capacity multiplier of the KV codec: fp bytes per
+        resident byte (1.0 when the codec is off or nothing resided)."""
+        return self.kv_codec_bytes_fp / self.kv_codec_bytes_resident \
+            if self.kv_codec_bytes_resident else 1.0
 
     def record_decode_step(self, n_tokens: int, dt: float,
                            n_slots: int = 0) -> None:
@@ -281,6 +312,10 @@ class ServeMetrics:
                 f"{_fmt_bytes(self.kv_prefill_gather_bytes)} "
                 f"(avoided "
                 f"{_fmt_bytes(self.kv_prefill_gather_bytes_avoided)})")
+        if self.kv_bytes_avoided:
+            parts.append(
+                f"kv codec {self.kv_capacity_multiplier():.2f}x "
+                f"(avoided {_fmt_bytes(self.kv_bytes_avoided)})")
         if self.ttft_hist.n:
             p50, p99 = self.ttft_hist.percentiles(50, 99)
             parts.append(f"ttft p50 {p50 * 1000:.0f}ms p99 {p99 * 1000:.0f}ms")
@@ -321,7 +356,13 @@ class ServeMetrics:
                 ("kv_prefill_gather_bytes",
                  "prefill-path KV install-copy bytes"),
                 ("kv_prefill_gather_bytes_avoided",
-                 "prefill install copies avoided (mixed-step)")):
+                 "prefill install copies avoided (mixed-step)"),
+                ("kv_codec_bytes_fp",
+                 "resident KV page bytes at fp (codec step sum)"),
+                ("kv_codec_bytes_resident",
+                 "resident KV page bytes compressed (codec step sum)"),
+                ("kv_bytes_avoided",
+                 "KV pool bytes the codec kept out of HBM")):
             reg.counter(f"{field}_total",
                         (lambda f=field: getattr(self, f)), help_)
         reg.counter("prefill_seconds_total", lambda: self.prefill_s,
@@ -335,6 +376,11 @@ class ServeMetrics:
                   "KV pages holding live request state (last step)")
         reg.gauge("pages_total", lambda: self.pages_total,
                   "KV page-pool size (last step)")
+        reg.gauge("kv_codec_error_bound", lambda: self.kv_codec_error_bound,
+                  "worst elementwise KV reconstruction error bound")
+        reg.gauge("kv_capacity_multiplier",
+                  lambda: self.kv_capacity_multiplier(),
+                  "effective KV capacity multiplier (fp/resident bytes)")
         for name, hist, help_ in (
                 ("ttft_seconds", self.ttft_hist, "time to first token"),
                 ("tpot_seconds", self.tpot_hist, "time per output token"),

@@ -79,6 +79,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import kv_codec as kv_codec_mod
+from repro.kernels.kv_codec import KV_CODECS
 from repro.models.api import (ATTN_BACKENDS, cache_layout, get_model,
                               supports_chunked_prefill,
                               supports_paged_attention)
@@ -278,24 +280,38 @@ class ServeEngine:
             supports_paged_attention(self.cfg)
 
     def mixed_step(self, params, kcache, table, toks, poss, q_lens, *,
-                   paged_flags: tuple, page_size: int):
+                   paged_flags: tuple, page_size: int, kv_scales=None):
         """One ragged mixed step for every slot straight over the paged
         pools: toks (S, Q) int32, poss (S,) int32 start positions, q_lens
         (S,) int32 real token counts (0 = free lane) -> (logits (S, Q, V),
         new cache tree).  ``kcache`` is donated — the page-pool update
         happens in place, with no gather/scatter anywhere on the prefill
-        or decode path."""
-        key = (paged_flags, page_size, int(toks.shape[1]))
+        or decode path.
+
+        ``kv_scales`` (``kv_codec="cluster"``): the scale-pool tree
+        riding alongside int8 code pools; it is donated too and the
+        return grows to ``(logits, new cache, new scales)``."""
+        codec = kv_scales is not None
+        key = (paged_flags, page_size, int(toks.shape[1]), codec)
         fn = self._mixed_jits.get(key)
         if fn is None:
             step = functools.partial(
                 self.api.mixed_step, self.cfg,
                 paged_flags=paged_flags, page_size=page_size,
                 interpret=self.kernel_interpret)
-            fn = jax.jit(
-                lambda p, c, t, tok, pos, ql: step(p, c, t, tok, pos, ql),
-                donate_argnums=(1,))
+            if codec:
+                fn = jax.jit(
+                    lambda p, c, t, tok, pos, ql, sc:
+                        step(p, c, t, tok, pos, ql, scales=sc),
+                    donate_argnums=(1, 6))
+            else:
+                fn = jax.jit(
+                    lambda p, c, t, tok, pos, ql:
+                        step(p, c, t, tok, pos, ql),
+                    donate_argnums=(1,))
             self._mixed_jits[key] = fn
+        if codec:
+            return fn(params, kcache, table, toks, poss, q_lens, kv_scales)
         return fn(params, kcache, table, toks, poss, q_lens)
 
     def step_params(self):
@@ -449,17 +465,26 @@ class SlotPool:
                  *, page_size: int | None = None,
                  n_pages: int | None = None,
                  backend: str = "gathered",
-                 page_capacity: int | None = None):
+                 page_capacity: int | None = None,
+                 kv_codec: str = "none"):
         if backend not in ATTN_BACKENDS:
             raise ValueError(f"unknown attention backend {backend!r}")
+        if kv_codec not in KV_CODECS:
+            raise ValueError(f"unknown kv codec {kv_codec!r}; "
+                             f"choose from {KV_CODECS}")
         self.engine = engine
         self.n_slots = n_slots
         self.page_size = page_size
         self.paged = page_size is not None
         self.backend = backend
+        self.kv_codec = kv_codec
+        self.codec = kv_codec == "cluster"
         if backend == "pallas_paged" and not self.paged:
             raise ValueError("the pallas_paged backend needs paged KV "
                              "lanes; set a page_size")
+        if self.codec and not self.paged:
+            raise ValueError("kv_codec='cluster' compresses the page "
+                             "pools; set a kv page_size")
         if self.paged:
             if page_size <= 0:
                 raise ValueError(f"page_size must be positive: {page_size}")
@@ -467,6 +492,10 @@ class SlotPool:
         self.slot_len = slot_len
         self.pages_per_slot = (slot_len // page_size) if self.paged else 0
         self.slots = [Slot(i) for i in range(n_slots)]
+        self.kscales = None          # pallas_paged codec scale-pool tree
+        self.page_scales = []        # gathered codec scale pools
+        self.page_bytes_fp = 0
+        self.page_bytes_resident = 0
         specs = engine.api.init_cache_specs(engine.cfg, 1, slot_len)
         # install() copies one freshly prefilled batch-1 cache into the
         # slot's pages + lane — the prefill-path gather traffic the
@@ -514,6 +543,20 @@ class SlotPool:
             int(np.prod(sa.shape)) * sa.dtype.itemsize
             for sa, ax in zip(leaves_a, self._paged_axis) if ax is not None)
         cap = self.page_capacity
+        # per-physical-page resident bytes across all paged leaves: fp at
+        # rest vs kv_codec="cluster"'s int8 codes + one f32 scale per
+        # (page, token) — the at-rest compression the codec-ratio metric
+        # and benchmark section report
+        fp_page, codec_page = 0, 0
+        for sa, ax in zip(leaves_a, self._paged_axis):
+            if ax is None:
+                continue
+            elems = int(np.prod(sa.shape)) // sa.shape[ax] * page_size
+            feat = int(np.prod(sa.shape[ax + 1:])) or 1
+            fp_page += elems * sa.dtype.itemsize
+            codec_page += elems + (elems // feat) * 4
+        self.page_bytes_fp = fp_page
+        self.page_bytes_resident = codec_page if self.codec else fp_page
         if backend == "pallas_paged":
             self.gather_bytes_per_step = 0
             self.gather_bytes_avoided_per_step = view_bytes
@@ -521,7 +564,7 @@ class SlotPool:
             # place with the batch-1 axis dropped; lane leaves carry the
             # slot axis where batch sat, so the paged decode runs all
             # slots in one batched trace
-            kleaves = []
+            kleaves, sleaves = [], []
             for sa, ax, bax in zip(leaves_a, self._paged_axis,
                                    self._batch_axis):
                 if ax is not None:
@@ -529,21 +572,40 @@ class SlotPool:
                         (sa.shape, ax, bax)
                     kleaves.append(jnp.zeros(
                         (*sa.shape[:ax - 1], cap, page_size,
-                         *sa.shape[ax + 1:]), sa.dtype))
+                         *sa.shape[ax + 1:]),
+                        jnp.int8 if self.codec else sa.dtype))
+                    sleaves.append(jnp.zeros(
+                        (*sa.shape[:ax - 1], cap, page_size), jnp.float32)
+                        if self.codec else None)
                 else:
                     kleaves.append(jnp.zeros(
                         (*sa.shape[:bax], n_slots, *sa.shape[bax + 1:]),
                         sa.dtype))
+                    sleaves.append(None)
             self.kcache = jax.tree_util.tree_unflatten(self._treedef,
                                                        kleaves)
+            # scale-pool tree: same treedef position-for-position, f32
+            # (n_pages, page) pools at pageable leaves, None elsewhere —
+            # the canonical per-leaf form mixed_step round-trips
+            self.kscales = jax.tree_util.tree_unflatten(
+                self._treedef, sleaves) if self.codec else None
             self._build_kernel_jits()
             return
         self.gather_bytes_per_step = view_bytes
         self.gather_bytes_avoided_per_step = 0
         self.pages = [
             jnp.zeros((cap, *sa.shape[:ax], page_size,
-                       *sa.shape[ax + 1:]), sa.dtype)
+                       *sa.shape[ax + 1:]),
+                      jnp.int8 if self.codec else sa.dtype)
             for sa, ax in zip(leaves_a, self._paged_axis) if ax is not None]
+        # one f32 scale per (page, token) rides each code pool; gather
+        # decodes pages back to fp views (the compiled decode step is
+        # untouched), scatter re-encodes them — idempotently, so
+        # untouched pages round-trip bit-identically
+        self.page_scales = [
+            jnp.zeros((cap, *sa.shape[:ax], page_size), jnp.float32)
+            for sa, ax in zip(leaves_a, self._paged_axis)
+            if ax is not None] if self.codec else []
         self.unpaged = [
             jnp.zeros((n_slots, *sa.shape), sa.dtype)
             for sa, ax in zip(leaves_a, self._paged_axis) if ax is None]
@@ -552,18 +614,36 @@ class SlotPool:
     def _build_page_jits(self) -> None:
         axes = self._paged_axis
         pps, page, view = self.pages_per_slot, self.page_size, self.slot_len
+        codec = self.codec
+        dtypes = [sa.dtype for sa in
+                  jax.tree_util.tree_flatten(
+                      self.engine.api.init_cache_specs(
+                          self.engine.cfg, 1, self.slot_len))[0]]
+
+        def feat_axes(v_ndim, rest_ndim):
+            # the trailing ``rest`` dims are the token's feature block,
+            # reduced into one codec scale per (page, token)
+            return tuple(range(v_ndim - rest_ndim, v_ndim))
 
         # A paged pool leaf is (n_pages, *lead, page, *rest) where the lane
         # leaf is (*lead, view, *rest) with view at axis ``ax``
         # (lead = leaf.shape[:ax]).  Gather pulls P pages per slot and
         # splices the page axis back into position ax; scatter inverts it.
-        def gather(pages, unpaged, table):
+        # Under kv_codec="cluster" the pools hold int8 codes + f32 scales:
+        # gather decodes pages into the original-dtype views (so the
+        # compiled decode step never changes), scatter re-encodes them.
+        def gather(pages, scales, unpaged, table):
             views, pi, ui = [], 0, 0
-            for ax in axes:
+            for ax, dt in zip(axes, dtypes):
                 if ax is not None:
-                    pool = pages[pi]
+                    v = pages[pi][table]        # (S, P, *lead, page, *rest)
+                    if codec:
+                        sc = scales[pi][table]  # (S, P, *lead, page)
+                        rest = v.ndim - sc.ndim
+                        v = kv_codec_mod.decode(
+                            v, sc.reshape(*sc.shape, *(1,) * rest)) \
+                            .astype(dt)
                     pi += 1
-                    v = pool[table]             # (S, P, *lead, page, *rest)
                     v = jnp.moveaxis(v, 1, 1 + ax)   # (S, *lead, P, page, ..)
                     views.append(v.reshape(*v.shape[:1 + ax], view,
                                            *v.shape[3 + ax:]))
@@ -572,43 +652,52 @@ class SlotPool:
                     ui += 1
             return jax.tree_util.tree_unflatten(self._treedef, views)
 
-        def scatter(pages, new_tree, table):
+        def scatter(pages, scales, new_tree, table):
             leaves = jax.tree_util.tree_flatten(new_tree)[0]
-            out_pages, out_unpaged, pi = [], [], 0
+            out_pages, out_scales, out_unpaged, pi = [], [], [], 0
             for leaf, ax in zip(leaves, axes):
                 if ax is not None:
                     pool = pages[pi]
-                    pi += 1
                     v = leaf.reshape(*leaf.shape[:1 + ax], pps, page,
                                      *leaf.shape[2 + ax:])
                     v = jnp.moveaxis(v, 1 + ax, 1)  # (S, P, *lead, page, ..)
+                    if codec:
+                        v, sc = kv_codec_mod.encode(
+                            v, feat_axes(v.ndim, leaf.ndim - ax - 2))
+                        out_scales.append(
+                            scales[pi].at[table].set(sc))
+                    pi += 1
                     out_pages.append(pool.at[table].set(v.astype(pool.dtype)))
                 else:
                     out_unpaged.append(leaf)
-            return out_pages, out_unpaged
+            return out_pages, out_scales, out_unpaged
 
-        def lane_scatter(pages, unpaged, lane, row, i):
+        def lane_scatter(pages, scales, unpaged, lane, row, i):
             leaves = jax.tree_util.tree_flatten(lane)[0]
-            out_pages, out_unpaged, pi, ui = [], [], 0, 0
+            out_pages, out_scales, out_unpaged, pi, ui = [], [], [], 0, 0
             for leaf, ax in zip(leaves, axes):
                 if ax is not None:
                     pool = pages[pi]
-                    pi += 1
                     v = leaf.reshape(*leaf.shape[:ax], pps, page,
                                      *leaf.shape[1 + ax:])
                     v = jnp.moveaxis(v, ax, 0)  # (P, *lead, page, *rest)
+                    if codec:
+                        v, sc = kv_codec_mod.encode(
+                            v, feat_axes(v.ndim, leaf.ndim - ax - 1))
+                        out_scales.append(scales[pi].at[row].set(sc))
+                    pi += 1
                     out_pages.append(pool.at[row].set(v.astype(pool.dtype)))
                 else:
                     pool = unpaged[ui]
                     ui += 1
                     out_unpaged.append(pool.at[i].set(leaf.astype(pool.dtype)))
-            return out_pages, out_unpaged
+            return out_pages, out_scales, out_unpaged
 
         # growing past page_capacity re-traces only these (decode compiles
         # are keyed on the gathered view, whose shape is pool-independent)
         self._gather = jax.jit(gather)
-        self._scatter_pages = jax.jit(scatter, donate_argnums=(0,))
-        self._lane_scatter = jax.jit(lane_scatter, donate_argnums=(0, 1))
+        self._scatter_pages = jax.jit(scatter, donate_argnums=(0, 1))
+        self._lane_scatter = jax.jit(lane_scatter, donate_argnums=(0, 1, 2))
 
     def _build_kernel_jits(self) -> None:
         """Admission-path scatter for the ``pallas_paged`` layout: write a
@@ -618,26 +707,39 @@ class SlotPool:
         len_axes, batch_axes = self._paged_axis, self._batch_axis
         pps, page, treedef = self.pages_per_slot, self.page_size, \
             self._treedef
+        codec = self.codec
 
-        def install(kcache, cache1, row, i):
+        def install(kcache, kscales, cache1, row, i):
             leaves = jax.tree_util.tree_flatten(kcache)[0]
             fresh = jax.tree_util.tree_flatten(cache1)[0]
-            out = []
-            for leaf, src, ax, bax in zip(leaves, fresh, len_axes,
-                                          batch_axes):
+            sleaves = jax.tree_util.tree_flatten(
+                kscales, is_leaf=lambda x: x is None)[0] if codec \
+                else [None] * len(leaves)
+            out, sout = [], []
+            for leaf, src, sleaf, ax, bax in zip(leaves, fresh, sleaves,
+                                                 len_axes, batch_axes):
                 if ax is not None:
                     # (*lead, 1, L, *rest) -> (*lead, P, page, *rest),
                     # scattered to this slot's physical pages
                     v = src.reshape(*src.shape[:ax - 1], pps, page,
                                     *src.shape[ax + 1:])
                     idx = (slice(None),) * (ax - 1) + (row,)
+                    if codec:
+                        # page axis sits at ax, features trail it
+                        v, sc = kv_codec_mod.encode(
+                            v, tuple(range(ax + 1, v.ndim)))
+                        sleaf = sleaf.at[idx].set(sc)
                 else:
                     v = jnp.squeeze(src, axis=bax)
                     idx = (slice(None),) * bax + (i,)
                 out.append(leaf.at[idx].set(v.astype(leaf.dtype)))
-            return jax.tree_util.tree_unflatten(treedef, out)
+                sout.append(sleaf)
+            new_kcache = jax.tree_util.tree_unflatten(treedef, out)
+            if not codec:
+                return new_kcache, kscales
+            return new_kcache, jax.tree_util.tree_unflatten(treedef, sout)
 
-        self._kernel_install = jax.jit(install, donate_argnums=(0,))
+        self._kernel_install = jax.jit(install, donate_argnums=(0, 1))
 
     # -- page bookkeeping ---------------------------------------------------
     def pages_needed(self, cache_len: int) -> int:
@@ -645,6 +747,16 @@ class SlotPool:
 
     def pages_in_use(self) -> int:
         return self.allocator.n_allocated if self.paged else 0
+
+    def codec_error_bound(self) -> float:
+        """Worst-case elementwise KV reconstruction error of the resident
+        pool (max per-token scale / 254); 0.0 when the codec is off."""
+        if not self.codec:
+            return 0.0
+        scales = (jax.tree_util.tree_leaves(self.kscales)
+                  if self.backend == "pallas_paged" else self.page_scales)
+        top = max((float(jnp.max(s)) for s in scales), default=0.0)
+        return float(kv_codec_mod.error_bound(top))
 
     def _ensure_pages(self, slot: Slot, upto_pos: int) -> None:
         """Allocate table entries so positions [0, upto_pos] are backed."""
@@ -685,11 +797,23 @@ class SlotPool:
                     out.append(leaf)
                 self.kcache = jax.tree_util.tree_unflatten(self._treedef,
                                                            out)
+                if self.codec:
+                    # scale pools are (*lead, cap, page): pad the cap axis
+                    self.kscales = jax.tree_util.tree_map(
+                        lambda s: jnp.concatenate(
+                            [s, jnp.zeros((*s.shape[:-2], extra,
+                                           s.shape[-1]), s.dtype)],
+                            axis=-2),
+                        self.kscales)
             else:
                 self.pages = [
                     jnp.concatenate(
                         [p, jnp.zeros((extra, *p.shape[1:]), p.dtype)])
                     for p in self.pages]
+                self.page_scales = [
+                    jnp.concatenate(
+                        [s, jnp.zeros((extra, *s.shape[1:]), s.dtype)])
+                    for s in self.page_scales]
             self.page_capacity = new_cap
             if self.backend != "pallas_paged":
                 self._build_page_jits()
@@ -731,12 +855,14 @@ class SlotPool:
             self._ensure_pages(slot, max(end - 1, 0))
             row = jnp.asarray(self.table[slot.index])
             if self.backend == "pallas_paged":
-                self.kcache = self._kernel_install(
-                    self.kcache, cache1, row, jnp.int32(slot.index))
-            else:
-                self.pages, self.unpaged = self._lane_scatter(
-                    self.pages, self.unpaged, cache1, row,
+                self.kcache, self.kscales = self._kernel_install(
+                    self.kcache, self.kscales, cache1, row,
                     jnp.int32(slot.index))
+            else:
+                self.pages, self.page_scales, self.unpaged = \
+                    self._lane_scatter(
+                        self.pages, self.page_scales, self.unpaged, cache1,
+                        row, jnp.int32(slot.index))
         else:
             self.cache = self._scatter(self.cache, cache1,
                                        jnp.int32(slot.index))
@@ -769,11 +895,18 @@ class SlotPool:
         free lane) -> logits (S, Q, V).  Pages backing every written
         position must already be ensured by the caller."""
         assert self.backend == "pallas_paged"
-        logits, self.kcache = self.engine.mixed_step(
-            params, self.kcache, jnp.asarray(self.table),
-            jnp.asarray(toks, dtype=jnp.int32), jnp.asarray(poss),
-            jnp.asarray(q_lens), paged_flags=self.paged_flags,
-            page_size=self.page_size)
+        if self.codec:
+            logits, self.kcache, self.kscales = self.engine.mixed_step(
+                params, self.kcache, jnp.asarray(self.table),
+                jnp.asarray(toks, dtype=jnp.int32), jnp.asarray(poss),
+                jnp.asarray(q_lens), paged_flags=self.paged_flags,
+                page_size=self.page_size, kv_scales=self.kscales)
+        else:
+            logits, self.kcache = self.engine.mixed_step(
+                params, self.kcache, jnp.asarray(self.table),
+                jnp.asarray(toks, dtype=jnp.int32), jnp.asarray(poss),
+                jnp.asarray(q_lens), paged_flags=self.paged_flags,
+                page_size=self.page_size)
         return logits
 
     # -- decode -------------------------------------------------------------
@@ -801,13 +934,15 @@ class SlotPool:
         elif self.paged:
             tel = self.engine.telemetry
             table = jnp.asarray(self.table)
-            with tel.timed("kv_gather"):
-                views = self._gather(self.pages, self.unpaged, table)
+            with tel.timed("kv_decode" if self.codec else "kv_gather"):
+                views = self._gather(self.pages, self.page_scales,
+                                     self.unpaged, table)
             logits, new_tree = self.engine.slot_decode(
                 params, views, jnp.asarray(toks), jnp.asarray(poss))
-            with tel.timed("kv_scatter"):
-                self.pages, self.unpaged = self._scatter_pages(
-                    self.pages, new_tree, table)
+            with tel.timed("kv_encode" if self.codec else "kv_scatter"):
+                self.pages, self.page_scales, self.unpaged = \
+                    self._scatter_pages(self.pages, self.page_scales,
+                                        new_tree, table)
             last = logits[:, 0, -1]                       # (S, V)
         else:
             logits, self.cache = self.engine.slot_decode(
@@ -870,6 +1005,7 @@ class Scheduler:
                  kv_pages: int | None = None,
                  kv_page_capacity: int | None = None,
                  attn_backend: str = "gathered",
+                 kv_codec: str = "none",
                  log_every: int = 0, emit: Callable[[str], None] = print):
         if mode not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduling mode {mode!r}")
@@ -882,6 +1018,12 @@ class Scheduler:
         if attn_backend == "pallas_paged" and kv_page_size is None:
             raise ValueError("attn_backend='pallas_paged' needs paged KV "
                              "lanes; set kv_page_size")
+        if kv_codec not in KV_CODECS:
+            raise ValueError(f"unknown kv codec {kv_codec!r}; "
+                             f"choose from {KV_CODECS}")
+        if kv_codec == "cluster" and kv_page_size is None:
+            raise ValueError("kv_codec='cluster' compresses the page "
+                             "pools; set kv_page_size")
         self.engine = engine
         self.batch_size = batch_size
         self.buckets = tuple(sorted(buckets))
@@ -893,6 +1035,7 @@ class Scheduler:
         self.kv_pages = kv_pages
         self.kv_page_capacity = kv_page_capacity
         self.attn_backend = attn_backend
+        self.kv_codec = kv_codec
         self.log_every = log_every
         self.emit = emit
         self._queue: list[Request] = []
@@ -969,7 +1112,8 @@ class Scheduler:
                                   page_size=self.kv_page_size,
                                   n_pages=self.kv_pages,
                                   backend=self.attn_backend,
-                                  page_capacity=self.kv_page_capacity)
+                                  page_capacity=self.kv_page_capacity,
+                                  kv_codec=self.kv_codec)
         return self._pool
 
     # -- serving -----------------------------------------------------------
@@ -994,6 +1138,9 @@ class Scheduler:
                 if pool.active():
                     with tel.timed("decode"):
                         self._step(pool, completed)
+        if pool.codec:
+            self.engine.metrics.record_kv_codec_error(
+                pool.codec_error_bound())
         return completed
 
     def _mixed_path(self, pool: SlotPool) -> bool:
@@ -1279,6 +1426,10 @@ class Scheduler:
                                  n_slots=pool.n_slots)
             m.record_pages(pool.pages_in_use(), pool.allocator.total)
             m.record_kv_gather(0, pool.gather_bytes_avoided_per_step)
+            if pool.codec:
+                m.record_kv_codec(pool.pages_in_use() * pool.page_bytes_fp,
+                                  pool.pages_in_use() *
+                                  pool.page_bytes_resident)
             if self.log_every and m.decode_steps % self.log_every == 0:
                 self.emit(self.engine.stats_line())
 
@@ -1302,5 +1453,9 @@ class Scheduler:
                        pool.allocator.total if pool.paged else 0)
         m.record_kv_gather(pool.gather_bytes_per_step,
                           pool.gather_bytes_avoided_per_step)
+        if pool.codec:
+            m.record_kv_codec(pool.pages_in_use() * pool.page_bytes_fp,
+                              pool.pages_in_use() *
+                              pool.page_bytes_resident)
         if self.log_every and m.decode_steps % self.log_every == 0:
             self.emit(self.engine.stats_line())

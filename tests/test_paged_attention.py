@@ -231,11 +231,20 @@ class TestBackendTokenEquivalence:
             Scheduler(engine, kv_page_size=4, attn_backend="flash3")
 
     def test_recurrent_arch_falls_back_with_note(self):
+        """The backend downgrade warns (warn-once per family); the
+        trigger rides inside ``pytest.warns`` so the escaped-warning
+        escalation in pyproject.toml stays clean."""
+        from repro.runtime import scheduler as sched_mod
+
         engine = make_engine("recurrentgemma-2b")
         assert not supports_paged_attention(engine.cfg)
         notes = []
-        sched = Scheduler(engine, kv_page_size=4,
-                          attn_backend="pallas_paged", emit=notes.append)
+        sched_mod._FALLBACK_WARNED.clear()     # deterministic first hit
+        with pytest.warns(RuntimeWarning,
+                          match="supports_paged_attention=False"):
+            sched = Scheduler(engine, kv_page_size=4,
+                              attn_backend="pallas_paged",
+                              emit=notes.append)
         assert sched.attn_backend == "gathered"
         assert any("gathered" in n for n in notes)
 
@@ -271,7 +280,7 @@ class TestKernelBackendHotPath:
         sched.submit(prompts[0], 6)
         out1 = sched.run()
         assert len(out1) == 1
-        key = (sched._pool.paged_flags, sched._pool.page_size, 1)
+        key = (sched._pool.paged_flags, sched._pool.page_size, 1, False)
         c0 = engine._mixed_jits[key]._cache_size()
         sched._pool.grow_pages(9)
         sched.submit(prompts[1], 6)

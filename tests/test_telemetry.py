@@ -19,7 +19,8 @@ from repro.models.api import get_model
 from repro.runtime import (NULL_TELEMETRY, DecodeTileCache, Histogram,
                            MetricsRegistry, Scheduler, ServeEngine,
                            ServeMetrics, Telemetry, Tracer, WeightStore,
-                           find_knee, parse_prom, recommend_store_capacity)
+                           find_knee, parse_prom, recommend_store_capacity,
+                           sweep_store)
 from repro.runtime.telemetry import (NULL_TRACER, PID_ENGINE, PID_REQUEST,
                                      NullTelemetry)
 from tests.test_models import reduced
@@ -417,6 +418,33 @@ class TestAutotune:
             rates = list(rng.uniform(0, 1, 6))
             i = find_knee(list(range(6)), rates, tolerance=0.02)
             assert rates[i] >= max(rates) - 0.02
+
+    def test_find_knee_staircase_prefers_latest_jump(self):
+        """Equal-size jumps tie-break toward the *latest* riser: on a
+        staircase curve Python's ``max()`` alone would return the first
+        maximal jump — a capacity still inside the thrashing region."""
+        caps = [10, 20, 30, 40]
+        rates = [0.10, 0.40, 0.70, 1.00]       # three equal 0.30 jumps
+        assert find_knee(caps, rates) == 3
+        # a genuinely larger early jump still wins over later small ones
+        assert find_knee([10, 20, 30], [0.0, 0.8, 0.81]) == 1
+
+    def test_sweep_store_clamps_tiny_models(self):
+        """A model whose working set rounds ``int(ws * frac)`` below one
+        decoded tile must still sweep non-degenerate caches: every
+        capacity is clamped up to the largest decoded tile, so the
+        full-capacity point hits (steps-1)/steps instead of 0."""
+        w = np.ones((4, 16), np.float32)       # tiny: one tile per layer
+        store = WeightStore(DecodeTileCache())
+        store.register_model("tiny", {"up": w}, select=lambda p, nd: True)
+        caps, rates = sweep_store(store, "tiny", steps=8)
+        tile = max(ts.c * ts.s * 4
+                   for _, stack in store.layers("tiny").items()
+                   for ts in [stack[0].ensure_tiled()])
+        assert all(c >= tile for c in caps)
+        assert rates[-1] == pytest.approx(7 / 8)
+        rec = recommend_store_capacity(store, "tiny", steps=8)
+        assert rec["capacity"] >= tile and rec["hit_rate"] > 0
 
     def test_find_knee_rejects_bad_input(self):
         with pytest.raises(ValueError):
