@@ -94,6 +94,8 @@ from repro.runtime import DecodeTileCache, WeightStore
 from repro.runtime.autotune import DEFAULT_FRACTIONS, find_knee
 
 SAMPLE_TRACE = pathlib.Path(__file__).parent / "traces" / "sample.jsonl"
+SHARED_PREFIX_TRACE = (pathlib.Path(__file__).parent / "traces"
+                       / "shared_prefix.jsonl")
 
 LAYERS = 4
 D, F = 288, 512
@@ -618,6 +620,90 @@ def kv_codec_compare(smoke: bool, seed: int = 0) -> None:
 
 
 # ---------------------------------------------------------------------------
+# prefix sharing: shared-prefix trace replay, sharing on vs off
+# ---------------------------------------------------------------------------
+
+def prefix_share_compare(smoke: bool, seed: int = 0) -> None:
+    """Replay the checked-in multi-tenant shared-prefix trace
+    (benchmarks/traces/shared_prefix.jsonl: each tenant's prompts extend
+    one deterministic 16-token system prefix) with ``prefix_share`` off
+    vs on.  Sharing must be token-identical, and the accounting identity
+    ``chunk_tokens(on) + tokens_reused == chunk_tokens(off)`` pins that
+    every reused token is prefill work the off run actually paid for —
+    the table reports the reuse, chunks avoided, copy-on-write copies,
+    and mean time-to-first-token."""
+    from repro.runtime import Scheduler, ServeEngine
+
+    cfg, params = _reduced_lm()
+    rows = [json.loads(line) for line in
+            SHARED_PREFIX_TRACE.read_text().splitlines() if line.strip()]
+    if smoke:
+        rows = rows[:8]
+    tenants = sorted({r["tenant"] for r in rows})
+    prefixes = {t: np.random.default_rng(seed + 100 + i).integers(
+        0, cfg.vocab_size, 16) for i, t in enumerate(tenants)}
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for r in rows:
+        pre = prefixes[r["tenant"]]
+        tail = rng.integers(0, cfg.vocab_size, r["prompt_len"] - len(pre))
+        reqs.append((np.concatenate([pre, tail]), r["decode_len"]))
+    slot_len = max(len(p) + g for p, g in reqs)
+    chunk = 4
+    print(f"\nprefix sharing: {len(reqs)} requests, {len(tenants)} tenants "
+          f"(16-token shared prefixes), chunk {chunk}, page 8, batch 2, "
+          f"reduced minitron-8b  [shared_prefix.jsonl]")
+    print(f"{'sharing':>8} | {'tok/s':>7} | {'ttft':>7} | {'reused':>6} | "
+          f"{'avoided':>7} | {'cow':>4}")
+
+    results = {}
+    for label, on in (("off", False), ("on", True)):
+        engine = ServeEngine(cfg, params, compress=True)
+        # kv_pages: headroom beyond the 2-slot worst case — a pool sized
+        # exactly to the slots would evict every cached prefix at each
+        # admission's reservation (the index lives in the spare pages)
+        sched = Scheduler(engine, batch_size=2, slot_len=slot_len,
+                          buckets=(64,), kv_page_size=8, kv_pages=20,
+                          prefill_chunk=chunk, prefix_share=on)
+        sched.submit(reqs[0][0], 2)              # warmup compile
+        sched.run()
+        if on:
+            sched._pool.prefix.clear()           # cold index for the run
+        engine.metrics = type(engine.metrics)()
+        for prompt, gen in reqs:
+            sched.submit(prompt, gen)
+        done = sched.run()
+        assert len(done) == len(reqs)
+        m = engine.metrics
+        ttfts = [r.first_token_latency() for r in
+                 sorted(done, key=lambda r: r.rid)[-len(reqs):]]
+        results[label] = dict(
+            toks=tuple(tuple(r.generated) for r in
+                       sorted(done, key=lambda r: r.rid)[-len(reqs):]),
+            tok_s=m.tokens_per_s(),
+            ttft=float(np.mean([t for t in ttfts if t is not None])),
+            chunk_tokens=m.prefill_chunk_tokens,
+            reused=m.prefix_tokens_reused,
+            avoided=m.prefill_chunks_avoided,
+            cow=m.prefix_cow_copies)
+        r = results[label]
+        print(f"{label:>8} | {r['tok_s']:>7.1f} | "
+              f"{r['ttft'] * 1000:>5.0f}ms | {r['reused']:>6} | "
+              f"{r['avoided']:>7} | {r['cow']:>4}")
+
+    off, on = results["off"], results["on"]
+    assert on["toks"] == off["toks"], \
+        "prefix sharing changed generated tokens"
+    assert on["reused"] > 0, "shared-prefix trace produced no reuse"
+    assert [t[0] for t in on["toks"]] == [t[0] for t in off["toks"]]
+    assert on["chunk_tokens"] + on["reused"] == off["chunk_tokens"], \
+        "reused tokens do not account for the skipped prefill work"
+    print(f"  {on['reused']} prompt tokens served from cached pages "
+          f"({on['avoided']} chunks avoided, {on['cow']} copy-on-write "
+          f"copies); token-identical outputs")
+
+
+# ---------------------------------------------------------------------------
 # telemetry: lifecycle trace + Prometheus export on the real scheduler
 # ---------------------------------------------------------------------------
 
@@ -817,6 +903,7 @@ def main():
         prefill_compare(smoke=args.smoke, seed=args.seed)
         backend_compare(smoke=args.smoke, seed=args.seed)
         kv_codec_compare(smoke=args.smoke, seed=args.seed)
+        prefix_share_compare(smoke=args.smoke, seed=args.seed)
         telemetry_smoke(smoke=args.smoke, seed=args.seed,
                         trace_out=args.trace_out,
                         metrics_out=args.metrics_out)

@@ -22,7 +22,11 @@ serve summary's KV gather counters read zero for prefill *and* decode.
 per-token scales (decoded in-kernel under ``pallas_paged``, at gather
 under ``gathered``) — ~4x resident-KV compression at a reported
 reconstruction-error bound, with the at-rest Huffman ratio of the
-resident codes printed in the summary.
+resident codes printed in the summary.  ``--prefix-share`` caches
+completed prefills' KV pages in a refcounted prefix index so requests
+extending a cached prefix (generate them with ``--shared-prefix-len``)
+map the shared pages and skip that prefill work — token-identical, with
+copy-on-write guarding every shared page.
 
 Observability: ``--trace-out trace.json`` records every request's
 lifecycle span tree (queued -> admitted -> prefill chunks -> decode ->
@@ -122,6 +126,20 @@ def main():
                          "gather; ~4x resident-KV compression at a "
                          "bounded reconstruction error; needs "
                          "--kv-page-size)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="cache completed prefills' KV pages in a prefix "
+                         "index; requests extending a cached prefix map "
+                         "the shared (refcounted) pages into their page "
+                         "table and skip that prefill work entirely, "
+                         "with copy-on-write protecting shared pages — "
+                         "token-identical to serving each request "
+                         "privately (needs --kv-page-size and "
+                         "--prefill-chunk)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="generate request prompts sharing a common "
+                         "prefix of this many tokens (0 = fully random "
+                         "prompts); pair with --prefix-share to see "
+                         "reuse, or without it for the baseline")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable async next-layer tile prefetch")
     ap.add_argument("--no-compress", action="store_true",
@@ -190,11 +208,15 @@ def main():
                           kv_pages=args.kv_pages,
                           attn_backend=args.attn_backend,
                           kv_codec=args.kv_codec,
+                          prefix_share=args.prefix_share,
                           log_every=args.log_every)
         rng = np.random.default_rng(0)
+        shared_len = min(args.shared_prefix_len, args.prompt_len - 1)
+        common = rng.integers(0, cfg.vocab_size, max(shared_len, 0))
         for _ in range(n_requests):
-            sched.submit(rng.integers(0, cfg.vocab_size, args.prompt_len),
-                         args.gen)
+            tail = rng.integers(0, cfg.vocab_size,
+                                args.prompt_len - len(common))
+            sched.submit(np.concatenate([common, tail]), args.gen)
 
         t0 = time.monotonic()
         completed = sched.run()
@@ -237,6 +259,15 @@ def main():
               f"installing prefilled caches, "
               f"{m.kv_prefill_gather_bytes_avoided} avoided by "
               f"mixed-step in-pool prefill")
+    if sched.prefix_share:
+        pool = sched._pool
+        print(f"prefix share: {m.prefix_hits} hits, "
+              f"{m.prefix_tokens_reused} prompt tokens served from "
+              f"cached pages ({m.prefill_chunks_avoided} prefill chunks "
+              f"avoided), {m.prefix_cow_copies} copy-on-write page "
+              f"copies, {m.prefix_evictions} index evictions")
+        print(f"prefix index: {pool.prefix.n_nodes} cached pages "
+              f"covering {pool.prefix.tokens_cached} tokens")
     if args.kv_codec == "cluster":
         pool = sched._pool
         print(f"kv codec (cluster): page {pool.page_bytes_fp} fp bytes -> "

@@ -80,6 +80,26 @@ def supports_paged_attention(cfg) -> bool:
     return all(k in PAGEABLE_KINDS for k in kinds)
 
 
+def supports_prefix_share(cfg) -> bool:
+    """True if ``cfg`` can map shared prefix KV pages into a new
+    request's page table: chunked prefill must be resumable (the suffix
+    is computed chunk by chunk from the cached span), no multimodal
+    prefix may shift absolute positions, and **every** cache leaf must
+    page — a rolling-window or recurrent lane would leave prefix state a
+    shared page cannot carry.  Rolling-window kinds (swa / local) are
+    chunkable and pageable but keep lane-backed leaves, so they are
+    excluded here."""
+    if not supports_chunked_prefill(cfg) or \
+            not supports_paged_attention(cfg):
+        return False
+    kinds = (tuple(cfg.prefix_kinds) + tuple(cfg.scan_pattern)
+             + tuple(cfg.suffix_kinds))
+    # probing cache_layout needs an api instance; kind names are the
+    # cheaper single source of truth for "has a non-length-scaling leaf"
+    windowed = ("swa", "local", "attn_local", "swa_moe")
+    return all(k in PAGEABLE_KINDS and k not in windowed for k in kinds)
+
+
 def cache_layout(api: "ModelAPI", cfg, slot_len: int):
     """Probe the cache-spec factory for each leaf's memory role.
 

@@ -51,6 +51,14 @@ Compression on BNNs"), module by module:
                        scheduling config and both backends are
                        token-identical, only latency, occupancy, and
                        copy traffic differ.
+  prefix_index         the paper's C1 skew applied to *requests*: a
+                       page-granular token trie caching completed
+                       prefills' KV pages, so a prompt extending a cached
+                       prefix maps those refcounted pages into its page
+                       table with zero prefill work; writes into shared
+                       pages copy-on-write, and eviction ranks entries
+                       with the same FrequencyWeighted prior (prefix
+                       hits as occurrence mass) the decode cache uses.
   metrics              the paper's measured quantities as counters:
                        throughput, slot occupancy, decode-cache hit rate,
                        HBM bytes streamed vs avoided, prefill-chunk
@@ -91,6 +99,7 @@ from repro.runtime.decode_cache import (DecodeTileCache, EvictionPolicy,
                                         FrequencyWeightedPolicy, LFUPolicy,
                                         LRUPolicy, make_policy)
 from repro.runtime.metrics import ServeMetrics
+from repro.runtime.prefix_index import PrefixIndex, PrefixNode
 from repro.runtime.scheduler import (PageAllocator, Request, Scheduler,
                                      ServeEngine, Slot, SlotPool)
 from repro.runtime.telemetry import (NULL_TELEMETRY, Histogram,
@@ -109,6 +118,8 @@ __all__ = [
     "NULL_TELEMETRY",
     "NullTelemetry",
     "PageAllocator",
+    "PrefixIndex",
+    "PrefixNode",
     "Request",
     "Scheduler",
     "ServeEngine",

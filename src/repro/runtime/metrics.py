@@ -111,6 +111,19 @@ class ServeMetrics:
     #                                    codec kept out of the pool
     kv_codec_error_bound: float = 0.0  # worst elementwise reconstruction
     #                                    error bound seen (max scale / 254)
+    prefix_hits: int = 0               # admissions that mapped a cached
+    #                                    prefix (prefix_share only)
+    prefix_tokens_reused: int = 0      # prompt tokens served straight
+    #                                    from shared pages — prefill work
+    #                                    for them was exactly zero
+    prefill_chunks_avoided: int = 0    # prefill chunks never executed
+    #                                    because their tokens were mapped
+    prefix_cow_copies: int = 0         # shared pages copy-on-write'd
+    #                                    when a request diverged
+    prefix_evictions: int = 0          # index entries dropped under
+    #                                    reservation pressure
+    shared_pages: int = 0              # pages referenced >1x (last-step
+    shared_page_steps: int = 0         # gauge; sum over steps for mean)
     _t0: float = dataclasses.field(default_factory=time.monotonic)
     # latency distributions (log-bucket histograms; seconds).  Lifetime
     # averages hide tails — the paper's wins are distribution claims, so
@@ -185,6 +198,27 @@ class ServeMetrics:
         self.kv_codec_bytes_fp += fp_bytes
         self.kv_codec_bytes_resident += resident_bytes
         self.kv_bytes_avoided += fp_bytes - resident_bytes
+
+    def record_prefix_hit(self, tokens: int, chunks_avoided: int) -> None:
+        """One admission that mapped a cached prefix: ``tokens`` prompt
+        positions rode shared pages (zero prefill work) and
+        ``chunks_avoided`` prefill chunks were never executed."""
+        self.prefix_hits += 1
+        self.prefix_tokens_reused += tokens
+        self.prefill_chunks_avoided += chunks_avoided
+
+    def record_prefix_cow(self) -> None:
+        """One shared page copied on write (request diverged mid-page)."""
+        self.prefix_cow_copies += 1
+
+    def record_prefix_evictions(self, n: int) -> None:
+        """Prefix-index entries dropped under reservation pressure."""
+        self.prefix_evictions += n
+
+    def record_shared_pages(self, n: int) -> None:
+        """Shared-page occupancy gauge after one decode step."""
+        self.shared_pages = n
+        self.shared_page_steps += n
 
     def record_kv_codec_error(self, bound: float) -> None:
         """Worst-case elementwise KV reconstruction error bound of the
@@ -316,6 +350,12 @@ class ServeMetrics:
             parts.append(
                 f"kv codec {self.kv_capacity_multiplier():.2f}x "
                 f"(avoided {_fmt_bytes(self.kv_bytes_avoided)})")
+        if self.prefix_hits:
+            parts.append(
+                f"prefix {self.prefix_hits} hits "
+                f"({self.prefix_tokens_reused} toks reused, "
+                f"{self.prefill_chunks_avoided} chunks avoided, "
+                f"{self.prefix_cow_copies} cow)")
         if self.ttft_hist.n:
             p50, p99 = self.ttft_hist.percentiles(50, 99)
             parts.append(f"ttft p50 {p50 * 1000:.0f}ms p99 {p99 * 1000:.0f}ms")
@@ -362,7 +402,19 @@ class ServeMetrics:
                 ("kv_codec_bytes_resident",
                  "resident KV page bytes compressed (codec step sum)"),
                 ("kv_bytes_avoided",
-                 "KV pool bytes the codec kept out of HBM")):
+                 "KV pool bytes the codec kept out of HBM"),
+                ("prefix_hits",
+                 "admissions that mapped a cached prefix"),
+                ("prefix_tokens_reused",
+                 "prompt tokens served from shared KV pages"),
+                ("prefill_chunks_avoided",
+                 "prefill chunks skipped via prefix sharing"),
+                ("prefix_cow_copies",
+                 "shared KV pages copied on write"),
+                ("prefix_evictions",
+                 "prefix-index entries evicted under pressure"),
+                ("shared_page_steps",
+                 "decode steps x shared pages (occupancy sum)")):
             reg.counter(f"{field}_total",
                         (lambda f=field: getattr(self, f)), help_)
         reg.counter("prefill_seconds_total", lambda: self.prefill_s,
@@ -376,6 +428,8 @@ class ServeMetrics:
                   "KV pages holding live request state (last step)")
         reg.gauge("pages_total", lambda: self.pages_total,
                   "KV page-pool size (last step)")
+        reg.gauge("shared_pages", lambda: self.shared_pages,
+                  "KV pages referenced by >1 owner (last step)")
         reg.gauge("kv_codec_error_bound", lambda: self.kv_codec_error_bound,
                   "worst elementwise KV reconstruction error bound")
         reg.gauge("kv_capacity_multiplier",

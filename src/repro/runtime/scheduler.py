@@ -83,10 +83,12 @@ from repro.kernels import kv_codec as kv_codec_mod
 from repro.kernels.kv_codec import KV_CODECS
 from repro.models.api import (ATTN_BACKENDS, cache_layout, get_model,
                               supports_chunked_prefill,
-                              supports_paged_attention)
+                              supports_paged_attention,
+                              supports_prefix_share)
 from repro.runtime import weight_store as ws_mod
 from repro.runtime.decode_cache import DecodeTileCache, EvictionPolicy
 from repro.runtime.metrics import ServeMetrics
+from repro.runtime.prefix_index import PrefixIndex
 from repro.runtime.telemetry import (NULL_TELEMETRY, PID_REQUEST,
                                      Telemetry)
 from repro.runtime.weight_store import WeightStore
@@ -137,10 +139,18 @@ class PageAllocator:
     ``reserve(n)`` earmarks capacity without picking pages (called once per
     admitted request with its worst-case page count); ``alloc`` hands out a
     concrete page against an existing reservation, so on-demand allocation
-    during decode can never fail mid-request.  Invariants (see
-    tests/test_paged_prefill.py): every id is free xor allocated, a page is
-    never handed out twice without an intervening ``release``, and
-    ``reserved <= len(free)`` at all times.
+    during decode can never fail mid-request.
+
+    Pages are **refcounted** so prefix sharing can map one physical page
+    into several owners: ``alloc`` starts a page at refcount 1, ``share``
+    takes another reference (no free-list traffic, no reservation), and
+    ``release`` drops one reference per call — the page returns to the
+    free list only when the last reference goes.  Invariants (see
+    tests/test_paged_prefill.py and tests/test_prefix_share.py): every id
+    is free xor allocated-with-refcount >= 1, a page is never handed out
+    twice without fully releasing it, releasing a page that is not
+    allocated raises ``ValueError`` (double frees must never silently
+    corrupt the free list), and ``reserved <= len(free)`` at all times.
     """
 
     def __init__(self, page_ids):
@@ -148,6 +158,7 @@ class PageAllocator:
         self.total = len(ids)
         self._free = sorted(ids, reverse=True)    # pop() -> ascending ids
         self._allocated: set[int] = set()
+        self._refs: dict[int, int] = {}
         self.reserved = 0
 
     @property
@@ -175,19 +186,41 @@ class PageAllocator:
         self.reserved -= n
 
     def alloc(self) -> int:
-        """One page against an existing reservation."""
+        """One page against an existing reservation (refcount 1)."""
         assert self.reserved > 0, "alloc without reservation"
         assert self._free, "reservation invariant broken: no free pages"
         self.reserved -= 1
         pid = self._free.pop()
         self._allocated.add(pid)
+        self._refs[pid] = 1
         return pid
 
+    def share(self, pid: int) -> int:
+        """Take one more reference on an allocated page (prefix sharing).
+        Consumes no free pages and no reservation."""
+        if pid not in self._allocated:
+            raise ValueError(f"share of unallocated page {pid}")
+        self._refs[pid] += 1
+        return pid
+
+    def refcount(self, pid: int) -> int:
+        return self._refs.get(pid, 0)
+
+    def shared_pages(self) -> int:
+        """Physical pages currently referenced by more than one owner."""
+        return sum(1 for r in self._refs.values() if r >= 2)
+
     def release(self, page_ids) -> None:
+        """Drop one reference per page; a page returns to the free list
+        only when its last reference goes."""
         for pid in page_ids:
-            assert pid in self._allocated, f"double free of page {pid}"
-            self._allocated.remove(pid)
-            self._free.append(pid)
+            if pid not in self._allocated:
+                raise ValueError(f"double free of page {pid}")
+            self._refs[pid] -= 1
+            if self._refs[pid] == 0:
+                del self._refs[pid]
+                self._allocated.remove(pid)
+                self._free.append(pid)
 
     def add_pages(self, page_ids) -> None:
         """Grow the pool (``SlotPool.grow_pages``)."""
@@ -404,6 +437,11 @@ class Slot:
     ``prefill_chunk`` into ``pcache`` (a standalone batch-1 cache that is
     installed into the pool when the last chunk lands).  ``reserved_left``
     is the slot's outstanding page reservation (paged pools only).
+    ``prefix_matched`` counts prompt tokens served from the prefix index
+    at admission — the chunk loop starts its cursor there, so those
+    tokens cost zero prefill work; ``_prefix_nodes`` holds the mapped
+    index nodes until the slot activates (gathered-backend pcache
+    seeding).
     """
 
     index: int
@@ -414,6 +452,8 @@ class Slot:
     prefill_cursor: int = 0
     pcache: object = None
     reserved_left: int = 0
+    prefix_matched: int = 0
+    _prefix_nodes: list | None = None
 
 
 class SlotPool:
@@ -466,7 +506,8 @@ class SlotPool:
                  n_pages: int | None = None,
                  backend: str = "gathered",
                  page_capacity: int | None = None,
-                 kv_codec: str = "none"):
+                 kv_codec: str = "none",
+                 prefix_share: bool = False):
         if backend not in ATTN_BACKENDS:
             raise ValueError(f"unknown attention backend {backend!r}")
         if kv_codec not in KV_CODECS:
@@ -479,12 +520,17 @@ class SlotPool:
         self.backend = backend
         self.kv_codec = kv_codec
         self.codec = kv_codec == "cluster"
+        self.prefix_share = prefix_share
+        self.prefix: PrefixIndex | None = None
         if backend == "pallas_paged" and not self.paged:
             raise ValueError("the pallas_paged backend needs paged KV "
                              "lanes; set a page_size")
         if self.codec and not self.paged:
             raise ValueError("kv_codec='cluster' compresses the page "
                              "pools; set a kv page_size")
+        if prefix_share and not self.paged:
+            raise ValueError("prefix_share maps shared KV pages; set a "
+                             "page_size")
         if self.paged:
             if page_size <= 0:
                 raise ValueError(f"page_size must be positive: {page_size}")
@@ -557,6 +603,17 @@ class SlotPool:
             codec_page += elems + (elems // feat) * 4
         self.page_bytes_fp = fp_page
         self.page_bytes_resident = codec_page if self.codec else fp_page
+        if prefix_share:
+            # every cache leaf must page for a mapped prefix to carry the
+            # request's whole state (Scheduler gates on the
+            # supports_prefix_share probe before building the pool)
+            if not all(self.paged_flags):
+                raise ValueError(
+                    "prefix_share needs every cache leaf paged; this "
+                    "arch keeps per-slot lanes a shared page cannot "
+                    "carry")
+            self.prefix = PrefixIndex(self.allocator, page_size,
+                                      page_bytes=self.page_bytes_resident)
         if backend == "pallas_paged":
             self.gather_bytes_per_step = 0
             self.gather_bytes_avoided_per_step = view_bytes
@@ -693,11 +750,18 @@ class SlotPool:
                     out_unpaged.append(pool.at[i].set(leaf.astype(pool.dtype)))
             return out_pages, out_scales, out_unpaged
 
+        def page_copy(pages, scales, src, dst):
+            # copy-on-write: duplicate physical page src into dst across
+            # every paged pool (and scale pool) leaf
+            return ([p.at[dst].set(p[src]) for p in pages],
+                    [s.at[dst].set(s[src]) for s in scales])
+
         # growing past page_capacity re-traces only these (decode compiles
         # are keyed on the gathered view, whose shape is pool-independent)
         self._gather = jax.jit(gather)
         self._scatter_pages = jax.jit(scatter, donate_argnums=(0, 1))
         self._lane_scatter = jax.jit(lane_scatter, donate_argnums=(0, 1, 2))
+        self._page_copy = jax.jit(page_copy, donate_argnums=(0, 1))
 
     def _build_kernel_jits(self) -> None:
         """Admission-path scatter for the ``pallas_paged`` layout: write a
@@ -739,7 +803,31 @@ class SlotPool:
                 return new_kcache, kscales
             return new_kcache, jax.tree_util.tree_unflatten(treedef, sout)
 
+        def kernel_copy(kcache, kscales, src, dst):
+            # copy-on-write in the kernel layout: pool leaves are
+            # (*lead, cap, page, *rest) with the physical-page axis at
+            # ax - 1; scale leaves are (*lead, cap, page)
+            leaves = jax.tree_util.tree_flatten(kcache)[0]
+            sleaves = jax.tree_util.tree_flatten(
+                kscales, is_leaf=lambda x: x is None)[0] if codec \
+                else [None] * len(leaves)
+            out, sout = [], []
+            for leaf, sleaf, ax in zip(leaves, sleaves, len_axes):
+                if ax is not None:
+                    s_idx = (slice(None),) * (ax - 1) + (src,)
+                    d_idx = (slice(None),) * (ax - 1) + (dst,)
+                    leaf = leaf.at[d_idx].set(leaf[s_idx])
+                    if codec:
+                        sleaf = sleaf.at[d_idx].set(sleaf[s_idx])
+                out.append(leaf)
+                sout.append(sleaf)
+            new_kcache = jax.tree_util.tree_unflatten(treedef, out)
+            if not codec:
+                return new_kcache, kscales
+            return new_kcache, jax.tree_util.tree_unflatten(treedef, sout)
+
         self._kernel_install = jax.jit(install, donate_argnums=(0, 1))
+        self._kernel_copy = jax.jit(kernel_copy, donate_argnums=(0, 1))
 
     # -- page bookkeeping ---------------------------------------------------
     def pages_needed(self, cache_len: int) -> int:
@@ -836,15 +924,166 @@ class SlotPool:
 
     # -- lane install / retire ---------------------------------------------
     def reserve_for(self, slot: Slot, req: Request) -> bool:
-        """Reserve every page ``req`` can need; False -> defer admission."""
+        """Reserve every page ``req`` can need; False -> defer admission.
+
+        A mapped prefix discounts the worst case by its fully-covered
+        pages only: positions >= ``prefix_matched`` span ``need`` pages
+        (a partially-matched boundary page is written and therefore
+        copy-on-write'd, costing one fresh allocation like any other).
+        Under reservation pressure the prefix index evicts cold entries
+        before admission is deferred — mapped pages stay alive through
+        the slot's own references."""
         if not self.paged:
             return True
         need = self.pages_needed(
-            self.engine.cache_len(req.prompt_len, req.max_new_tokens))
+            self.engine.cache_len(req.prompt_len, req.max_new_tokens)) \
+            - slot.prefix_matched // self.page_size
         if not self.allocator.reserve(need):
-            return False
+            if self.prefix is None:
+                return False
+            evicted = self.prefix.evict_until(need)
+            if evicted:
+                self.engine.metrics.record_prefix_evictions(evicted)
+            if not self.allocator.reserve(need):
+                return False
         slot.reserved_left = need
         return True
+
+    # -- prefix sharing -----------------------------------------------------
+    def map_prefix(self, slot: Slot, req: Request, align: int) -> int:
+        """Map the longest cached prefix of ``req``'s prompt into the
+        slot's page table (one shared reference per page, owned by the
+        slot and released by the normal retire path) -> matched tokens.
+        ``align`` is the prefill chunk size: the match is floored to a
+        chunk boundary so the computed suffix is bit-identical to the
+        sharing-off oracle's."""
+        if self.prefix is None:
+            return 0
+        nodes, matched = self.prefix.lookup(req.prompt,
+                                            req.prompt_len - 1, align)
+        if not matched:
+            return 0
+        row = self.table[slot.index]
+        for j, node in enumerate(nodes):
+            row[j] = self.allocator.share(node.page)
+        self.prefix.hit(nodes)
+        slot.prefix_matched = matched
+        slot._prefix_nodes = nodes
+        return matched
+
+    def unmap_prefix(self, slot: Slot) -> None:
+        """Roll back :meth:`map_prefix` (reservation failure path)."""
+        if not slot.prefix_matched:
+            return
+        row = self.table[slot.index]
+        n = -(-slot.prefix_matched // self.page_size)
+        self.allocator.release(int(row[j]) for j in range(n))
+        row[:n] = DUMMY_PAGE
+        slot.prefix_matched = 0
+        slot._prefix_nodes = None
+
+    def seed_pcache(self, slot: Slot) -> None:
+        """Write the mapped prefix's raw-fp fragments into the slot's
+        fresh standalone prefill cache at positions [0, matched) exactly
+        — bit-identical to what the sharing-off chunk loop would have
+        computed there (gathered backend only; the mixed-step path reads
+        the shared pool pages in place)."""
+        matched = slot.prefix_matched
+        if not matched or slot.pcache is None:
+            return
+        leaves, treedef = jax.tree_util.tree_flatten(slot.pcache)
+        P = self.page_size
+        for k, node in enumerate(slot._prefix_nodes):
+            lo, hi = k * P, min((k + 1) * P, matched)
+            if hi <= lo:
+                break
+            pi = 0
+            for li, ax in enumerate(self._paged_axis):
+                if ax is None:
+                    continue
+                frag = node.frag[pi]
+                pi += 1
+                sub = frag[(slice(None),) * ax + (slice(0, hi - lo),)]
+                leaves[li] = leaves[li].at[
+                    (slice(None),) * ax + (slice(lo, hi),)].set(
+                    jnp.asarray(sub))
+        slot.pcache = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def register_prefix(self, slot: Slot, cache1=None) -> None:
+        """Insert a just-prefilled slot's pages into the prefix index:
+        full prompt pages plus the partial boundary page (its tail holds
+        positions the mapping masks never expose; the first write by the
+        owning slot copy-on-writes away from it, funded by one extra
+        reservation taken here).  ``cache1`` is the gathered backend's
+        completed standalone cache, snapshotted into raw-fp fragments
+        before install quantised it into the pool."""
+        if self.prefix is None:
+            return
+        req = slot.req
+        L, P = req.prompt_len, self.page_size
+        row = self.table[slot.index]
+        frags = self._extract_frags(cache1, -(-L // P)) \
+            if cache1 is not None else None
+        if L % P and self.allocator.reserve(1):
+            if self.prefix.register(req.prompt, row, frags=frags,
+                                    allow_partial=True):
+                slot.reserved_left += 1
+            else:
+                self.allocator.unreserve(1)
+        else:
+            self.prefix.register(req.prompt, row, frags=frags,
+                                 allow_partial=False)
+
+    def _extract_frags(self, cache1, n_pages: int) -> list:
+        """Host copies of each paged leaf's per-page slices of a
+        standalone batch-1 cache -> frags[page][leaf]."""
+        leaves = jax.tree_util.tree_flatten(cache1)[0]
+        P = self.page_size
+        frags = []
+        for j in range(n_pages):
+            per_leaf = []
+            for leaf, ax in zip(leaves, self._paged_axis):
+                if ax is None:
+                    continue
+                per_leaf.append(np.asarray(
+                    leaf[(slice(None),) * ax
+                         + (slice(j * P, (j + 1) * P),)]))
+            frags.append(per_leaf)
+        return frags
+
+    def _prepare_write(self, slot: Slot, lo_pos: int, hi_pos: int) -> None:
+        """Copy-on-write barrier: before positions [lo_pos, hi_pos] are
+        written, any shared page backing them (refcount >= 2: the prefix
+        index and/or another slot also reference it) is duplicated into a
+        fresh private page and swapped into this slot's table row.  Draws
+        on the slot's reservation like any other allocation, so it cannot
+        fail mid-request."""
+        if self.prefix is None:
+            return
+        row = self.table[slot.index]
+        P = self.page_size
+        for j in range(lo_pos // P, hi_pos // P + 1):
+            pid = int(row[j])
+            if pid == DUMMY_PAGE or self.allocator.refcount(pid) < 2:
+                continue
+            new = self.allocator.alloc()
+            slot.reserved_left -= 1
+            assert slot.reserved_left >= 0
+            self._copy_page(pid, new)
+            row[j] = new
+            self.allocator.release([pid])
+            self.engine.metrics.record_prefix_cow()
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        with self.engine.telemetry.timed("kv_cow"):
+            if self.backend == "pallas_paged":
+                self.kcache, self.kscales = self._kernel_copy(
+                    self.kcache, self.kscales, jnp.int32(src),
+                    jnp.int32(dst))
+            else:
+                self.pages, self.page_scales = self._page_copy(
+                    self.pages, self.page_scales, jnp.int32(src),
+                    jnp.int32(dst))
 
     def install(self, slot: Slot, cache1, tok: int) -> None:
         """Write a freshly prefilled batch-1 cache into the slot's lane and
@@ -852,6 +1091,15 @@ class SlotPool:
         req = slot.req
         end = self.engine.pos_offset(req.prompt_len)   # positions < end used
         if self.paged:
+            # install rewrites the whole row: positions < prefix_matched
+            # carry bit-identical bytes (the pcache was seeded from the
+            # cached prefix's raw-fp fragments, and the codec encodes
+            # per-token), so fully-matched shared pages are safe to
+            # rewrite in place — only the partially-matched boundary
+            # page (written with this request's own suffix) needs the
+            # copy-on-write barrier
+            self._prepare_write(slot, slot.prefix_matched,
+                                max(end - 1, slot.prefix_matched))
             self._ensure_pages(slot, max(end - 1, 0))
             row = jnp.asarray(self.table[slot.index])
             if self.backend == "pallas_paged":
@@ -886,6 +1134,8 @@ class SlotPool:
         slot.reserved_left = 0
         slot.prefilling = False
         slot.pcache = None
+        slot.prefix_matched = 0
+        slot._prefix_nodes = None
         slot.req = None
 
     # -- mixed step (pallas_paged): prefill chunks + decode, one trace ------
@@ -927,6 +1177,10 @@ class SlotPool:
             poss[s.index] = s.pos
             q_lens[s.index] = 1
             if self.paged:
+                # a registered request's partial boundary page is shared
+                # with the prefix index: the decode append must land on a
+                # private copy
+                self._prepare_write(s, s.pos, s.pos)
                 self._ensure_pages(s, s.pos)   # page for this step's write
         if self.backend == "pallas_paged":
             logits = self.mixed_step(params, toks[:, :, 0], poss, q_lens)
@@ -1006,6 +1260,7 @@ class Scheduler:
                  kv_page_capacity: int | None = None,
                  attn_backend: str = "gathered",
                  kv_codec: str = "none",
+                 prefix_share: bool = False,
                  log_every: int = 0, emit: Callable[[str], None] = print):
         if mode not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduling mode {mode!r}")
@@ -1024,6 +1279,12 @@ class Scheduler:
         if kv_codec == "cluster" and kv_page_size is None:
             raise ValueError("kv_codec='cluster' compresses the page "
                              "pools; set kv_page_size")
+        if prefix_share and kv_page_size is None:
+            raise ValueError("prefix_share maps shared KV pages; set "
+                             "kv_page_size")
+        if prefix_share and prefill_chunk is None:
+            raise ValueError("prefix_share skips prefill chunk by chunk; "
+                             "set prefill_chunk")
         self.engine = engine
         self.batch_size = batch_size
         self.buckets = tuple(sorted(buckets))
@@ -1036,6 +1297,7 @@ class Scheduler:
         self.kv_page_capacity = kv_page_capacity
         self.attn_backend = attn_backend
         self.kv_codec = kv_codec
+        self.prefix_share = prefix_share
         self.log_every = log_every
         self.emit = emit
         self._queue: list[Request] = []
@@ -1062,6 +1324,16 @@ class Scheduler:
                 f"attention-style cache to page)")
             emit(f"note: {engine.cfg.family} arch has no paged decode "
                  "attention; falling back to the gathered backend")
+        if self.prefix_share and (self.prefill_chunk is None or
+                                  not supports_prefix_share(engine.cfg)):
+            self.prefix_share = False
+            _warn_fallback(
+                engine.cfg.family, "prefix_share",
+                f"{engine.cfg.family} arch downgraded to unshared KV "
+                f"pages: supports_prefix_share=False (prefix sharing "
+                f"needs chunked prefill and every cache leaf paged)")
+            emit(f"note: {engine.cfg.family} arch cannot map shared "
+                 "prefix pages; serving each request's KV privately")
 
     # -- admission ---------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int) -> Request:
@@ -1113,7 +1385,8 @@ class Scheduler:
                                   n_pages=self.kv_pages,
                                   backend=self.attn_backend,
                                   page_capacity=self.kv_page_capacity,
-                                  kv_codec=self.kv_codec)
+                                  kv_codec=self.kv_codec,
+                                  prefix_share=self.prefix_share)
         return self._pool
 
     # -- serving -----------------------------------------------------------
@@ -1188,12 +1461,24 @@ class Scheduler:
         if self.prefill_chunk is not None:
             slot.req = req
             slot.prefilling = True
-            slot.prefill_cursor = 0
+            # a mapped prefix starts the chunk cursor past the cached
+            # span — those prompt tokens cost zero prefill work
+            slot.prefill_cursor = slot.prefix_matched
             # mixed-step prefill writes chunks straight into the slot's
             # pages/lane — no standalone batch-1 cache exists at all
             slot.pcache = None if self._mixed_path(pool) else \
                 self.engine.fresh_slot_cache(pool.slot_len)
+            if slot.prefix_matched:
+                pool.seed_pcache(slot)
+                m.record_prefix_hit(
+                    slot.prefix_matched,
+                    slot.prefix_matched // self.prefill_chunk)
             self._trace_admitted(req, slot)
+            if slot.prefix_matched:
+                tr = self.engine.telemetry.tracer
+                if tr.enabled:
+                    tr.instant(PID_REQUEST, req.rid, "prefix_hit",
+                               req.t_admit, tokens=slot.prefix_matched)
             return
         t0 = time.monotonic()
         slot.req = req
@@ -1255,7 +1540,18 @@ class Scheduler:
                     return
                 req = self._queue[0]
             slot = pool.free()[0] if pool.free() else None
-            if slot is None or not pool.reserve_for(slot, req):
+            ok = False
+            if slot is not None:
+                matched = pool.map_prefix(slot, req,
+                                          self.prefill_chunk or 1)
+                ok = pool.reserve_for(slot, req)
+                if not ok and matched:
+                    # a hit whose *remaining* pages cannot be reserved is
+                    # rolled back — the request may still fit unshared
+                    # (mapped pages themselves occupy free-list capacity)
+                    pool.unmap_prefix(slot)
+                    ok = pool.reserve_for(slot, req)
+            if not ok:
                 if slot is not None and not pool.busy():
                     # idle pool that still can't reserve: no retire will
                     # ever free pages, so deferring would spin forever
@@ -1318,7 +1614,11 @@ class Scheduler:
                             "non-finite prefill logits (compressed "
                             "reconstruction or model numerics are broken)")
                     tok = int(jnp.argmax(logits[0, -1]))
-                    pool.install(slot, slot.pcache, tok)
+                    # install clears pcache; the prefix index snapshots
+                    # its raw-fp pages (install is not donated cache1)
+                    cache1 = slot.pcache
+                    pool.install(slot, cache1, tok)
+                    pool.register_prefix(slot, cache1)
                     self._record_first_token(req, tok)
                     m.record_admit(1, 0.0, tokens=1)
                     self._maybe_finish(pool, slot, completed)
@@ -1365,12 +1665,16 @@ class Scheduler:
             toks[slot.index, 0] = slot.tok
             poss[slot.index] = slot.pos
             q_lens[slot.index] = 1
+            pool._prepare_write(slot, slot.pos, slot.pos)
             pool._ensure_pages(slot, slot.pos)
         for slot, c in chunks:
             cur = slot.prefill_cursor
             toks[slot.index, :c] = slot.req.prompt[cur:cur + c]
             poss[slot.index] = cur
             q_lens[slot.index] = c
+            # chunk K/V lands in the pool in place: shared pages under
+            # the write range must be copy-on-write'd first
+            pool._prepare_write(slot, cur, cur + c - 1)
             pool._ensure_pages(slot, cur + c - 1)
         t0 = time.monotonic()
         params = self.engine.step_params()
@@ -1415,6 +1719,11 @@ class Scheduler:
                 slot.pcache = None
                 slot.tok = int(nxt[slot.index])
                 slot.pos = self.engine.pos_offset(req.prompt_len)
+                # mixed-step pages hold the kernel-written (possibly
+                # codec-encoded) K/V; the index shares them in place —
+                # per-(page, token) encoding keeps a future hit
+                # bit-identical to the sharing-off run
+                pool.register_prefix(slot)
                 self._record_first_token(req, slot.tok)
                 m.record_admit(1, 0.0, tokens=1)
                 # the install copy the gathered oracle performs at the
@@ -1425,6 +1734,8 @@ class Scheduler:
             m.record_decode_step(len(active), dt_decode,
                                  n_slots=pool.n_slots)
             m.record_pages(pool.pages_in_use(), pool.allocator.total)
+            if pool.prefix is not None:
+                m.record_shared_pages(pool.allocator.shared_pages())
             m.record_kv_gather(0, pool.gather_bytes_avoided_per_step)
             if pool.codec:
                 m.record_kv_codec(pool.pages_in_use() * pool.page_bytes_fp,
@@ -1451,6 +1762,8 @@ class Scheduler:
                              n_slots=pool.n_slots)
         m.record_pages(pool.pages_in_use(),
                        pool.allocator.total if pool.paged else 0)
+        if pool.prefix is not None:
+            m.record_shared_pages(pool.allocator.shared_pages())
         m.record_kv_gather(pool.gather_bytes_per_step,
                           pool.gather_bytes_avoided_per_step)
         if pool.codec:

@@ -1,9 +1,27 @@
 """Optional-hypothesis shim: property tests degrade to skips, the rest of
-the module still collects and runs when hypothesis isn't installed."""
+the module still collects and runs when hypothesis isn't installed.
+
+When hypothesis *is* installed, two profiles are registered and selected
+via the ``HYPOTHESIS_PROFILE`` env var (the CI fuzz job exports it):
+
+  * ``ci``   — derandomized (fixed seed, reproducible failures) with the
+    default example budget; the job's deterministic first pass;
+  * ``fuzz`` — short randomized pass layered on top, so every CI run
+    explores a few fresh traces without flaking the deterministic gate.
+"""
+
+import os
 
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
+
+    settings.register_profile("ci", derandomize=True, deadline=None)
+    settings.register_profile("fuzz", derandomize=False, deadline=None,
+                              max_examples=25)
+    _profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if _profile:                                      # pragma: no cover
+        settings.load_profile(_profile)
 except ImportError:                                   # pragma: no cover
     import pytest
 

@@ -30,6 +30,9 @@ import pytest
 from repro.kernels import kv_codec
 from repro.kernels.paged_attention import paged_decode_attention
 from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from tests.harness import (MIXED, assert_tokens_identical, make_engine,
+                           mixed_requests)
+from tests.harness import run_trace as serve
 from tests.test_paged_attention import random_paged_cache
 
 SEED_GRID = [0, 1, 2, 3, 17, 255]
@@ -273,3 +276,41 @@ class TestKernelCodecPath:
         poisoned = run(kc2, vc2)
         assert np.isfinite(poisoned).all()
         np.testing.assert_array_equal(clean, poisoned)
+
+
+# ---------------------------------------------------------------------------
+# codec through the serving stack (tests.harness)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    return make_engine()
+
+
+class TestCodecServing:
+    def test_codec_none_is_identity(self, engine):
+        """kv_codec="none" over paged lanes is byte-for-byte the plain
+        paged path — every generated token identical to the monolithic
+        baseline."""
+        reqs = mixed_requests(engine, MIXED[:4])
+        base = serve(engine, reqs)
+        got = serve(engine, reqs, kv_page_size=4, kv_codec="none")
+        assert_tokens_identical(got, base, "kv_codec=none")
+
+    @pytest.mark.parametrize("backend", [
+        "gathered",
+        pytest.param("pallas_paged", marks=pytest.mark.pallas)])
+    def test_cluster_first_tokens_exact(self, engine, backend):
+        """kv_codec="cluster" is lossy at rest, but the first generated
+        token of every request comes out of the (uncompressed) prefill
+        forward pass before any page is encoded — it must be exact under
+        both attention backends, and every request must still finish."""
+        reqs = mixed_requests(engine, MIXED[:4])
+        kw = dict(kv_page_size=4, attn_backend=backend)
+        base = serve(engine, reqs, **kw)
+        got = serve(engine, reqs, kv_codec="cluster", **kw)
+        assert set(got) == set(base)
+        for i in sorted(base):
+            assert got[i][0] == base[i][0], \
+                f"first token diverged for request {i}"
+            assert len(got[i]) == len(base[i])

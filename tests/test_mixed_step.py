@@ -12,15 +12,14 @@ ragged multi-token form is additionally checked against a pure-numpy
 oracle on random page tables.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.paged_attention import paged_mixed_attention
-from repro.models.api import get_model
-from repro.runtime import Scheduler, ServeEngine
-from tests.test_models import reduced
+from repro.runtime import Scheduler
+from tests.harness import MIXED, make_engine, mixed_requests
+from tests.harness import run_trace as serve
 
 pytestmark = pytest.mark.pallas   # CI kernels-interpret job runs these
 
@@ -84,28 +83,6 @@ class TestRaggedKernel:
 # mixed-step serving vs the gathered oracle
 # ---------------------------------------------------------------------------
 
-def make_engine(arch="minitron-8b", seed=0):
-    cfg = reduced(arch)
-    params = jax.tree_util.tree_map(
-        np.asarray, get_model(cfg).init_params(cfg, jax.random.PRNGKey(seed)))
-    return ServeEngine(cfg, params, compress=True)
-
-
-MIXED = [(5, 7), (12, 2), (20, 5), (6, 9)]
-
-
-def serve(engine, reqs, **kw):
-    kw.setdefault("batch_size", 2)
-    kw.setdefault("buckets", (32,))
-    sched = Scheduler(engine, **kw)
-    rids = {}
-    for i, r in enumerate(reqs):
-        rids[sched.submit(*r).rid] = i
-    done = sched.run()
-    assert len(done) == len(reqs)
-    return {rids[r.rid]: tuple(r.generated) for r in done}
-
-
 @pytest.fixture(scope="module")
 def engine():
     return make_engine()
@@ -114,8 +91,7 @@ def engine():
 @pytest.fixture(scope="module")
 def baseline(engine):
     """The gathered oracle: monolithic prefill, monolithic lanes."""
-    rng = np.random.default_rng(7)
-    reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g) for L, g in MIXED]
+    reqs = mixed_requests(engine, MIXED[:4])
     return reqs, serve(engine, reqs)
 
 

@@ -13,10 +13,11 @@ import numpy as np
 import pytest
 
 from repro.kernels.paged_attention import paged_decode_attention
-from repro.models.api import get_model, supports_paged_attention
+from repro.models.api import supports_paged_attention
 from repro.models.attention import decode_attention
-from repro.runtime import Scheduler, ServeEngine
-from tests.test_models import reduced
+from repro.runtime import Scheduler
+from tests.harness import MIXED, make_engine, mixed_requests
+from tests.harness import run_trace as serve
 
 pytestmark = pytest.mark.pallas   # CI kernels-interpret job runs these
 
@@ -148,28 +149,6 @@ class TestKernelVsOracle:
 # backend seam: token-identical serving across archs / page sizes
 # ---------------------------------------------------------------------------
 
-def make_engine(arch="minitron-8b", seed=0):
-    cfg = reduced(arch)
-    params = jax.tree_util.tree_map(
-        np.asarray, get_model(cfg).init_params(cfg, jax.random.PRNGKey(seed)))
-    return ServeEngine(cfg, params, compress=True)
-
-
-MIXED = [(5, 7), (12, 2), (20, 5), (6, 9)]
-
-
-def serve(engine, reqs, **kw):
-    kw.setdefault("batch_size", 2)
-    kw.setdefault("buckets", (32,))
-    sched = Scheduler(engine, **kw)
-    rids = {}
-    for i, r in enumerate(reqs):
-        rids[sched.submit(*r).rid] = i
-    done = sched.run()
-    assert len(done) == len(reqs)
-    return {rids[r.rid]: tuple(r.generated) for r in done}
-
-
 @pytest.fixture(scope="module")
 def engine():
     return make_engine()
@@ -177,8 +156,7 @@ def engine():
 
 @pytest.fixture(scope="module")
 def baseline(engine):
-    rng = np.random.default_rng(7)
-    reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g) for L, g in MIXED]
+    reqs = mixed_requests(engine, MIXED[:4])
     return reqs, serve(engine, reqs)
 
 

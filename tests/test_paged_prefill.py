@@ -3,36 +3,13 @@ monolithic PR-2 paths, page-allocator invariants (no leak, no double
 allocation, cross-slot isolation), and pool growth without decode
 recompiles."""
 
-import jax
 import numpy as np
 import pytest
 
-from repro.models.api import get_model, supports_chunked_prefill
-from repro.runtime import PageAllocator, Scheduler, ServeEngine
-from tests.test_models import reduced
-
-
-def make_engine(arch="minitron-8b", seed=0):
-    cfg = reduced(arch)
-    params = jax.tree_util.tree_map(
-        np.asarray, get_model(cfg).init_params(cfg, jax.random.PRNGKey(seed)))
-    return ServeEngine(cfg, params, compress=True)
-
-
-def serve(engine, reqs, **kw):
-    """-> {request index: generated token tuple}."""
-    kw.setdefault("batch_size", 2)
-    kw.setdefault("buckets", (32,))
-    sched = Scheduler(engine, **kw)
-    rids = {}
-    for i, r in enumerate(reqs):
-        rids[sched.submit(*r).rid] = i
-    done = sched.run()
-    assert len(done) == len(reqs)
-    return {rids[r.rid]: tuple(r.generated) for r in done}
-
-
-MIXED = [(5, 7), (12, 2), (20, 5), (6, 9), (3, 1), (9, 4)]
+from repro.models.api import supports_chunked_prefill
+from repro.runtime import PageAllocator, Scheduler
+from tests.harness import make_engine, mixed_requests
+from tests.harness import run_trace as serve
 
 
 @pytest.fixture(scope="module")
@@ -43,8 +20,7 @@ def engine():
 @pytest.fixture(scope="module")
 def baseline(engine):
     """Monolithic-prefill, monolithic-lane tokens (the PR-2 path)."""
-    rng = np.random.default_rng(7)
-    reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g) for L, g in MIXED]
+    reqs = mixed_requests(engine)
     return reqs, serve(engine, reqs)
 
 
@@ -156,11 +132,14 @@ class TestPageAllocator:
             PageAllocator(range(2)).alloc()            # alloc w/o reserve
 
     def test_double_free_caught(self):
+        """Releasing an id already on the free list must raise — a silent
+        double free would put the page on the free list twice and hand it
+        to two slots at once."""
         a = PageAllocator(range(4))
         a.reserve(1)
         pid = a.alloc()
         a.release([pid])
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="double free"):
             a.release([pid])
 
     def test_fragmented_free_list_keeps_reservations_infallible(self):

@@ -1,0 +1,469 @@
+"""Differential fuzz harness for prefix sharing with copy-on-write KV
+pages.
+
+Three layers, cheapest first:
+
+* **allocator fuzz** — seeded multi-owner churn traces over the
+  refcounted :class:`PageAllocator` against a pure-python reference
+  refcount model; every step checks the conservation invariants (every
+  id free xor allocated-with-refcount >= 1, external refs == allocator
+  refcounts, no id on both lists) and every trace drains to empty.
+* **index model fuzz** — seeded register/lookup traces over
+  :class:`PrefixIndex` against a longest-common-prefix oracle built from
+  the raw registered prompts: ``lookup`` must return exactly
+  ``min(max_r lcp(prompt, r), len - 1)`` floored to the chunk alignment,
+  and the returned nodes must spell the matched tokens page by page.
+* **differential serving** — real Scheduler traces (shared, partially
+  shared, mid-prefix-divergent, and disjoint prompts, plus
+  retire-readmit churn) must generate byte-identical tokens with
+  sharing on vs off across both attention backends and both KV codecs,
+  while the accounting identity ``chunk_tokens(on) + tokens_reused ==
+  chunk_tokens(off)`` pins that the reuse is real skipped prefill work
+  — and copy-on-write must never leave a written page shared.
+
+The deterministic seed grids alone cover 200+ traces (110 allocator +
+96 index + the serving grid); the hypothesis drivers at the bottom
+re-run the same check functions over randomized traces in CI (see
+tests/_hypothesis_compat.py for the profiles).
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime import PageAllocator, PrefixIndex, Scheduler, SlotPool
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from tests.harness import assert_tokens_identical, make_engine
+from tests.harness import run_trace as serve
+
+# ---------------------------------------------------------------------------
+# refcount semantics (unit)
+# ---------------------------------------------------------------------------
+
+
+class TestRefcounts:
+    def test_alloc_share_release_lifecycle(self):
+        a = PageAllocator(range(1, 5))
+        assert a.reserve(1)
+        pid = a.alloc()
+        assert a.refcount(pid) == 1 and a.shared_pages() == 0
+        assert a.share(pid) == pid
+        assert a.refcount(pid) == 2 and a.shared_pages() == 1
+        a.release([pid])                       # drops to 1: still allocated
+        assert a.refcount(pid) == 1 and a.n_allocated == 1
+        assert a.shared_pages() == 0
+        a.release([pid])                       # last ref: back on free list
+        assert a.refcount(pid) == 0 and a.n_allocated == 0
+        assert a.n_free == a.total
+
+    def test_share_of_unallocated_page_raises(self):
+        a = PageAllocator(range(1, 5))
+        with pytest.raises(ValueError, match="unallocated"):
+            a.share(2)
+        assert a.reserve(1)
+        pid = a.alloc()
+        a.release([pid])
+        with pytest.raises(ValueError, match="unallocated"):
+            a.share(pid)
+
+    def test_double_free_raises(self):
+        """Regression: releasing a freed id used to silently append it to
+        the free list again, letting two slots own one physical page."""
+        a = PageAllocator(range(1, 5))
+        assert a.reserve(2)
+        pid, other = a.alloc(), a.alloc()
+        a.release([pid])
+        n_free = a.n_free
+        with pytest.raises(ValueError, match="double free"):
+            a.release([pid])
+        assert a.n_free == n_free             # free list not corrupted
+        with pytest.raises(ValueError, match="double free"):
+            a.release([99])                   # never-allocated id: same guard
+        a.release([other])
+
+    def test_share_consumes_no_free_pages_or_reservation(self):
+        a = PageAllocator(range(1, 4))
+        assert a.reserve(1)
+        pid = a.alloc()
+        free, reserved = a.n_free, a.reserved
+        for _ in range(5):
+            a.share(pid)
+        assert (a.n_free, a.reserved) == (free, reserved)
+        a.release([pid] * 6)
+        assert a.n_allocated == 0
+
+
+# ---------------------------------------------------------------------------
+# allocator fuzz: seeded churn vs a reference refcount model
+# ---------------------------------------------------------------------------
+
+def check_allocator_churn(seed: int, steps: int = 60) -> None:
+    """One churn trace: random alloc-groups / extra shares / releases,
+    with the full invariant set asserted after every step and a drain
+    check at the end.  ``held`` is the reference model — one entry per
+    outstanding reference."""
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(range(1, 25))
+    held: list[list[int]] = []
+    for _ in range(steps):
+        op = rng.random()
+        if op < 0.40 and a.available() > 0:
+            n = int(rng.integers(1, min(a.available(), 4) + 1))
+            assert a.reserve(n)
+            held.append([a.alloc() for _ in range(n)])
+        elif op < 0.60 and held:
+            grp = held[int(rng.integers(len(held)))]
+            pid = grp[int(rng.integers(len(grp)))]
+            held.append([a.share(pid)])
+        elif held:
+            a.release(held.pop(int(rng.integers(len(held)))))
+        # -- invariants, every step --
+        assert a.n_free + a.n_allocated == a.total
+        refs: dict[int, int] = {}
+        for grp in held:
+            for pid in grp:
+                refs[pid] = refs.get(pid, 0) + 1
+        assert set(refs) == a._allocated, "allocated <-> referenced"
+        for pid, n in refs.items():
+            assert a.refcount(pid) == n, f"refcount drift on page {pid}"
+        assert not set(a._free) & a._allocated, "id free AND allocated"
+        assert all(a.refcount(pid) == 0 for pid in a._free)
+        assert a.reserved == 0
+    while held:
+        a.release(held.pop())
+    assert a.n_allocated == 0 and a.n_free == a.total
+    assert not a._refs
+
+
+class TestAllocatorFuzz:
+    @pytest.mark.parametrize("seed", range(110))
+    def test_churn_trace(self, seed):
+        check_allocator_churn(seed)
+
+
+# ---------------------------------------------------------------------------
+# index model fuzz: lookup vs a longest-common-prefix oracle
+# ---------------------------------------------------------------------------
+
+def _lcp(a, b) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+def check_index_model(seed: int, steps: int = 25) -> None:
+    """One register/lookup trace.  Prompts come from a tiny vocabulary so
+    shared, partially shared, and divergent prefixes all occur; after
+    every lookup the match length and node spans are checked against the
+    raw-prompt oracle, and after every registration the allocator
+    invariants are re-checked."""
+    rng = np.random.default_rng(seed)
+    P = int(rng.choice([2, 3, 4]))
+    align = int(rng.choice([1, 2, 4]))
+    a = PageAllocator(range(1, 65))
+    idx = PrefixIndex(a, P)
+    registered: list[tuple] = []
+    for _ in range(steps):
+        L = int(rng.integers(1, 11))
+        prompt = tuple(int(t) for t in rng.integers(0, 2, L))
+        nodes, matched = idx.lookup(prompt, L - 1, align)
+        # oracle: longest common prefix against any registered prompt,
+        # capped below the prompt length, floored to the chunk alignment
+        want = min(max((_lcp(prompt, r) for r in registered), default=0),
+                   L - 1)
+        want -= want % align
+        assert matched == (want if want > 0 else 0), \
+            f"lookup {matched} != oracle {want} for {prompt}"
+        assert len(nodes) == (-(-matched // P) if matched else 0)
+        for k, node in enumerate(nodes):
+            span = prompt[k * P:min((k + 1) * P, matched)]
+            assert node.tokens[:len(span)] == span, \
+                f"node {k} covers {node.tokens}, expected prefix {span}"
+            assert a.refcount(node.page) >= 1
+        # simulate the slot lifecycle: map (share), alloc the rest,
+        # register, retire (release every slot-held ref)
+        n_pages = -(-L // P)
+        n_mapped = matched // P
+        row = [a.share(nodes[j].page) for j in range(n_mapped)]
+        if not a.reserve(n_pages - n_mapped):
+            a.release(row)
+            continue                           # pool exhausted: skip admit
+        row += [a.alloc() for _ in range(n_pages - n_mapped)]
+        idx.register(prompt, row)
+        registered.append(prompt)
+        a.release(row)
+        # -- invariants: the index's own refs keep exactly its nodes --
+        assert a.n_free + a.n_allocated == a.total
+        pages = [n.page for n in idx._nodes()]
+        assert len(set(pages)) == len(pages), "two nodes share a page"
+        assert all(a.refcount(p) >= 1 for p in pages)
+        assert a.n_allocated == len(pages)
+        assert idx.tokens_cached == sum(len(n.tokens)
+                                        for n in idx._nodes())
+    # eviction drains everything once nothing is mapped
+    dropped = idx.evict_until(a.total + 1)
+    assert dropped + idx.n_nodes >= 0 and idx.clear() >= 0
+    assert a.n_allocated == 0 and a.n_free == a.total and not a._refs
+
+
+class TestPrefixIndexModel:
+    @pytest.mark.parametrize("seed", range(96))
+    def test_register_lookup_trace(self, seed):
+        check_index_model(seed)
+
+    def test_register_dedupes_identical_spans(self):
+        a = PageAllocator(range(1, 9))
+        idx = PrefixIndex(a, 2)
+        assert a.reserve(4)
+        row1 = [a.alloc(), a.alloc()]
+        idx.register((1, 2, 3, 4), row1)
+        a.release(row1)
+        assert idx.n_nodes == 2 and a.n_allocated == 2
+        row2 = [a.share(next(iter(idx._root.children.values())).page),
+                a.alloc()]
+        idx.register((1, 2, 3, 4), row2)      # same spans: no new nodes
+        a.release(row2)
+        assert idx.n_nodes == 2 and a.n_allocated == 2
+
+    def test_eviction_only_drops_childless_nodes(self):
+        a = PageAllocator(range(1, 9))
+        idx = PrefixIndex(a, 2)
+        assert a.reserve(3)
+        row = [a.alloc() for _ in range(3)]
+        idx.register((1, 2, 3, 4, 5), row)    # 2 full pages + partial
+        a.release(row)
+        assert idx.n_nodes == 3
+        idx.evict_until(a.n_free + 1)         # free exactly one more page
+        assert idx.n_nodes == 2               # a leaf went, parents stayed
+        remaining = list(idx._nodes())
+        assert all(len(n.tokens) == 2 for n in remaining) \
+            or any(n.children for n in remaining)
+        idx.evict_until(a.total + 1)
+        assert idx.n_nodes == 0 and a.n_allocated == 0
+
+    def test_evicted_but_mapped_page_degrades_to_private(self):
+        """Evicting a node releases only the index's reference: a slot
+        still mapping the page keeps it allocated at refcount 1 (plain
+        private ownership — copy-on-write no longer triggers on it)."""
+        a = PageAllocator(range(1, 5))
+        idx = PrefixIndex(a, 2)
+        assert a.reserve(1)
+        row = [a.alloc()]
+        idx.register((7, 8), row)
+        a.release(row)                        # retire: index ref remains
+        pid = next(idx._nodes()).page
+        slot_ref = a.share(pid)               # a later hit maps the page
+        assert a.refcount(pid) == 2
+        assert idx.evict_until(a.total) >= 1
+        assert idx.n_nodes == 0
+        assert a.refcount(pid) == 1 and a.n_allocated == 1
+        a.release([slot_ref])
+        assert a.n_allocated == 0 and a.n_free == a.total
+
+
+# ---------------------------------------------------------------------------
+# differential serving: sharing on == sharing off, token for token
+# ---------------------------------------------------------------------------
+
+def prefix_requests(engine, seed=0):
+    """Shared, partially shared, divergent, and disjoint prompts: four
+    requests extend one 16-token prefix, one diverges mid-prefix, two
+    are unrelated."""
+    rng = np.random.default_rng(seed)
+    V = engine.cfg.vocab_size
+    common = rng.integers(0, V, 16)
+    reqs = [(np.concatenate([common, rng.integers(0, V, int(t))]), g)
+            for t, g in [(3, 5), (5, 4), (2, 6), (6, 3)]]
+    div = common.copy()
+    div[9] = (div[9] + 1) % V
+    reqs.append((np.concatenate([div, rng.integers(0, V, 3)]), 4))
+    reqs.append((rng.integers(0, V, 7), 5))
+    reqs.append((rng.integers(0, V, 21), 3))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return make_engine()
+
+
+GRID = [
+    ("gathered", "none", 4),
+    ("gathered", "none", 8),
+    ("gathered", "cluster", 8),
+    pytest.param("pallas_paged", "none", 8, marks=pytest.mark.pallas),
+    pytest.param("pallas_paged", "cluster", 4, marks=pytest.mark.pallas),
+]
+
+
+class TestDifferentialServing:
+    @pytest.mark.parametrize("backend,codec,page", GRID)
+    def test_tokens_identical_and_work_conserved(self, engine, backend,
+                                                 codec, page):
+        """Sharing on vs off: byte-identical tokens, and every reused
+        token is a prefill chunk token the off run had to compute —
+        ``chunk_tokens(on) + tokens_reused == chunk_tokens(off)`` (so a
+        fully cached prefix costs exactly zero prefill work)."""
+        reqs = prefix_requests(engine)
+        kw = dict(kv_page_size=page, prefill_chunk=4, attn_backend=backend,
+                  kv_codec=codec)
+        engine.metrics = type(engine.metrics)()
+        off = serve(engine, reqs, **kw)
+        chunk_tokens_off = engine.metrics.prefill_chunk_tokens
+        engine.metrics = type(engine.metrics)()
+        on = serve(engine, reqs, prefix_share=True, **kw)
+        m = engine.metrics
+        assert_tokens_identical(on, off, f"{backend}/{codec}/page{page}")
+        assert m.prefix_hits > 0 and m.prefix_tokens_reused > 0
+        assert m.prefill_chunk_tokens + m.prefix_tokens_reused \
+            == chunk_tokens_off
+        assert m.prefix_tokens_reused % 4 == 0    # chunk-aligned matches
+
+    def test_retire_readmit_churn(self, engine):
+        """The same prompts resubmitted to a warm scheduler: every
+        request now extends a registered prefix, tokens stay identical
+        to the cold pass, and reuse strictly grows."""
+        engine.metrics = type(engine.metrics)()
+        reqs = prefix_requests(engine)
+        sched = Scheduler(engine, batch_size=2, buckets=(32,),
+                          kv_page_size=8, prefill_chunk=4,
+                          prefix_share=True)
+        rids = {sched.submit(*r).rid: i for i, r in enumerate(reqs)}
+        cold = {rids[r.rid]: tuple(r.generated) for r in sched.run()}
+        reused_cold = engine.metrics.prefix_tokens_reused
+        rids = {sched.submit(*r).rid: i for i, r in enumerate(reqs)}
+        warm = {rids[r.rid]: tuple(r.generated) for r in sched.run()}
+        assert_tokens_identical(warm, cold, "readmit")
+        m = engine.metrics
+        assert m.prefix_tokens_reused > reused_cold
+        # warm pass: every sharing-eligible prompt (len > chunk after the
+        # limit cap) hits; 6 of the 7 prompts qualify
+        assert m.prefix_hits >= 6
+
+    def test_drain_leaves_only_index_references(self, engine):
+        """After the queue drains, the only live pages are the index's
+        (one reference each); ``clear`` releases them all and the pool
+        returns to empty — no leak in either direction."""
+        reqs = prefix_requests(engine)
+        sched = Scheduler(engine, batch_size=2, buckets=(32,),
+                          kv_page_size=8, prefill_chunk=4,
+                          prefix_share=True)
+        for r in reqs:
+            sched.submit(*r)
+        assert len(sched.run()) == len(reqs)
+        pool = sched._pool
+        a = pool.allocator
+        assert a.reserved == 0
+        assert a.n_allocated == pool.prefix.n_nodes > 0
+        for node in pool.prefix._nodes():
+            assert a.refcount(node.page) == 1
+        assert pool.prefix.clear() > 0
+        assert a.n_allocated == 0 and a.n_free == a.total
+        assert (pool.table == 0).all()
+
+    def test_cow_never_leaves_a_written_page_shared(self, engine,
+                                                    monkeypatch):
+        """The core copy-on-write safety property, asserted at every
+        barrier call during a real serving trace: after
+        ``_prepare_write(slot, lo, hi)`` returns, no page backing
+        positions [lo, hi] of that slot is shared (refcount must be 1 —
+        the write cannot alias another owner's bytes)."""
+        orig = SlotPool._prepare_write
+        barriers = []
+
+        def checked(pool, slot, lo_pos, hi_pos):
+            orig(pool, slot, lo_pos, hi_pos)
+            if pool.prefix is None:
+                return
+            row = pool.table[slot.index]
+            P = pool.page_size
+            for j in range(lo_pos // P, hi_pos // P + 1):
+                pid = int(row[j])
+                if pid:
+                    assert pool.allocator.refcount(pid) == 1, \
+                        f"page {pid} still shared after COW barrier"
+                    barriers.append(pid)
+
+        monkeypatch.setattr(SlotPool, "_prepare_write", checked)
+        reqs = prefix_requests(engine)
+        engine.metrics = type(engine.metrics)()
+        base = serve(engine, reqs, kv_page_size=8, prefill_chunk=4)
+        got = serve(engine, reqs, kv_page_size=8, prefill_chunk=4,
+                    prefix_share=True)
+        assert_tokens_identical(got, base, "cow-instrumented")
+        assert barriers and engine.metrics.prefix_cow_copies > 0
+
+    def test_metrics_and_stats_line(self, engine):
+        engine.metrics = type(engine.metrics)()
+        reqs = prefix_requests(engine)
+        serve(engine, reqs, kv_page_size=8, prefill_chunk=4,
+              prefix_share=True)
+        m = engine.metrics
+        assert m.prefix_hits > 0
+        assert m.prefill_chunks_avoided > 0
+        assert m.shared_page_steps > 0
+        assert "prefix" in m.stats_line() and "toks reused" in m.stats_line()
+        prom = m.registry().render()
+        assert "repro_prefix_tokens_reused_total" in prom
+        assert "repro_shared_pages" in prom
+
+    def test_sharing_off_by_default(self, engine):
+        engine.metrics = type(engine.metrics)()
+        sched = Scheduler(engine, batch_size=2, buckets=(32,),
+                          kv_page_size=8, prefill_chunk=4)
+        sched.submit(np.arange(9) % engine.cfg.vocab_size, 2)
+        sched.run()
+        assert sched._pool.prefix is None
+        assert engine.metrics.prefix_hits == 0
+
+
+class TestGating:
+    def test_requires_page_size(self, engine):
+        with pytest.raises(ValueError, match="kv_page_size"):
+            Scheduler(engine, prefix_share=True, prefill_chunk=4)
+
+    def test_requires_prefill_chunk(self, engine):
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            Scheduler(engine, prefix_share=True, kv_page_size=8)
+
+    def test_windowed_arch_downgrades_with_note(self):
+        """gemma2's rolling-window leaves stay per-slot lanes, so a
+        shared page cannot carry the whole prefix state: prefix_share
+        downgrades (warn-once + note) and serving stays correct."""
+        from repro.runtime import scheduler as sched_mod
+
+        engine = make_engine("gemma2-2b")
+        sched_mod._FALLBACK_WARNED.clear()
+        notes = []
+        with pytest.warns(RuntimeWarning,
+                          match="supports_prefix_share=False"):
+            sched = Scheduler(engine, kv_page_size=8, prefill_chunk=4,
+                              prefix_share=True, emit=notes.append)
+        assert not sched.prefix_share
+        assert any("shared" in n for n in notes)
+        rng = np.random.default_rng(1)
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, 11), 3)]
+        base = serve(engine, reqs)
+        got = serve(engine, reqs, kv_page_size=8, prefill_chunk=4,
+                    prefix_share=True)
+        assert got == base
+
+
+# ---------------------------------------------------------------------------
+# hypothesis drivers (randomized traces on top of the seed grids; CI)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    seed_st = st.integers(min_value=0, max_value=2 ** 32 - 1)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=seed_st, steps=st.integers(10, 120))
+    def test_allocator_churn_property(seed, steps):
+        check_allocator_churn(seed, steps)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=seed_st, steps=st.integers(5, 40))
+    def test_index_model_property(seed, steps):
+        check_index_model(seed, steps)
