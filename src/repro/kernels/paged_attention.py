@@ -2,16 +2,16 @@
 
 Attention that consumes the scheduler's paged KV layout *directly*: the
 physical page pool ``(n_pages, page, KH, D)`` plus a per-slot page table
-and per-slot lengths.  Each ``(slot, q_block, logical page)`` grid step
-pulls exactly one physical page into VMEM — the BlockSpec index map reads
-the page table through scalar prefetch, so the DMA engine walks the table
-and never touches pages the slot does not own — applies the per-token
-causal/position mask, and folds the page into an online-softmax
-accumulator held in VMEM scratch.  No contiguous per-slot view of the
-cache is ever materialised, in HBM or anywhere else: this is the serving
-analogue of the paper's in-pipeline decoding unit (§IV), which consumes
-operands in their at-rest layout instead of expanding them into memory
-first.
+and per-slot lengths.  Each ``(slot, q_block, page group)`` grid step
+pulls ``pages_per_step`` physical pages into VMEM — the BlockSpec index
+maps read the page table through scalar prefetch, so the DMA engine
+walks the table and never touches pages the slot does not own — applies
+the per-token causal/position mask, and folds the pages into an
+online-softmax accumulator held in VMEM scratch.  No contiguous
+per-slot view of the cache is ever materialised, in HBM or anywhere
+else: this is the serving analogue of the paper's in-pipeline decoding
+unit (§IV), which consumes operands in their at-rest layout instead of
+expanding them into memory first.
 
 Since the mixed-step generalisation the kernel serves *ragged
 multi-token* queries: slot ``s`` contributes ``q_lens[s]`` consecutive
@@ -29,7 +29,11 @@ Layout contract (shared with ``runtime.scheduler.SlotPool``):
     point at it and it is never read as a valid position (every position
     ``< lengths[s]`` has a real page, and everything else is masked);
   * a slot's logical page ``j`` covers absolute positions
-    ``[j * page, (j + 1) * page)``;
+    ``[j * page_size, (j + 1) * page_size)`` where ``page_size`` is the
+    *logical* page length — the pool's physical page dimension may be
+    padded up to a sublane tile (``page_size=0`` means they coincide),
+    and padded rows are masked out of the softmax like any other
+    out-of-range position;
   * ``lengths[s]`` = number of valid positions *including* this step's
     tokens (the whole chunk's K/V is written into the pool *before* the
     call; the per-token causal masks preserve write-after-attend
@@ -37,6 +41,17 @@ Layout contract (shared with ``runtime.scheduler.SlotPool``):
   * padded rows/tokens (``i >= q_lens[s]``, including ``q_lens[s] == 0``
     free lanes) attend nothing and produce finite garbage the caller
     discards.
+
+Hardware shaping (``pages_per_step``, tiled pools): with
+``pages_per_step = c > 1`` each grid step carries ``c`` physical pages,
+one BlockSpec per page, indexed ``table[s, j * c + i]``.  Pallas
+double-buffers every input BlockSpec across grid steps, so the ``c``
+page DMAs of step ``j + 1`` overlap the score/softmax compute of step
+``j`` — the same async-copy overlap ``pltpu.make_async_copy`` expresses
+by hand, but driven by the pipeline.  Feature dims padded toward the
+(8, 128) sublane/lane tiles by ``SlotPool`` cost nothing here: zero
+key/value columns contribute exactly ``0.0`` to every f32 dot product,
+and padded page rows score ``NEG_INF`` and vanish in the exp.
 
 The optional second score operand ``(q2, k2_pages)`` serves MLA absorbed
 decode: scores are ``q . k + q2 . k2`` (latent + rope parts) over a
@@ -47,16 +62,15 @@ operation order exactly.
 
 Compressed pages (``kv_codec="cluster"``): when ``k_scales``/``v_scales``
 are passed the pools hold int8 codebook indices and each page is decoded
-*in VMEM* right after its DMA — a 256-entry codebook lookup (the same
-one-hot idiom as ``fused_decode_contraction``'s weight-tile decode)
-times the per-(slot, token) scale row that rides its own scalar-prefetch
+*in VMEM* right after its DMA — a 256-entry codebook gather times the
+per-(slot, token) scale row that rides its own scalar-prefetch
 BlockSpec — before the online-softmax score ever sees it.  The fp page
-never exists in HBM.
+never exists in HBM.  ``dequant="onehot"`` keeps the previous
+one-hot-matmul lookup as a bit-identity reference.
 
 ``interpret=True`` runs the identical kernel through the Pallas
 interpreter on CPU — how CI exercises it (same convention as
-``fused_decode_matmul``).  Block shapes follow the model's head dims; on
-real TPUs pad heads/pages toward (8, 128) tiles for peak DMA efficiency.
+``fused_decode_matmul``).
 """
 
 from __future__ import annotations
@@ -74,38 +88,60 @@ from repro.kernels.kv_codec import LEVELS, ZERO_CODE
 NEG_INF = -1e30
 
 
-def _dequant(codes, scale_row, cb):
+def effective_q_block(qn: int, q_block: int) -> int:
+    """The query-block width the kernel will actually run.
+
+    ``q_block=0`` means the whole ``Q`` per grid step; non-divisor
+    requests round down to ``gcd(Q, q_block)`` (the same convention as
+    flash_attention's ``q_chunk``).  Exposed so the scheduler can count
+    the silent roundings (``kernel_qblock_rounded``)."""
+    return math.gcd(qn, q_block) if q_block else qn
+
+
+def _dequant(codes, scale_row, cb, mode: str):
     """Decode one int8 page in VMEM: codebook lookup * per-token scale.
 
     ``codes`` (page, KH, D) int8, ``scale_row`` (page,) f32, ``cb``
-    (LEVELS,) f32.  The lookup is a one-hot compare against an iota —
-    TPU-friendly (no gather), identical in shape to the table lookup in
-    ``kernels.huffman_decode.decode_step``.
-    """
-    flat = codes.reshape(-1, 1).astype(jnp.int32) + ZERO_CODE
-    sel = flat == jax.lax.broadcasted_iota(
-        jnp.int32, (flat.shape[0], LEVELS), 1)
-    vals = jnp.where(sel, cb[None, :], 0.0).sum(-1).reshape(codes.shape)
+    (LEVELS,) f32.  ``mode="gather"`` is the direct 256-entry gather;
+    ``mode="onehot"`` keeps the previous one-hot compare against an iota
+    (O(page * LEVELS) select+sum) as a bit-identity reference — a
+    one-hot sum of a single selected centroid is the centroid itself,
+    bit for bit."""
+    if mode == "gather":
+        vals = cb[codes.astype(jnp.int32) + ZERO_CODE]
+    else:
+        flat = codes.reshape(-1, 1).astype(jnp.int32) + ZERO_CODE
+        sel = flat == jax.lax.broadcasted_iota(
+            jnp.int32, (flat.shape[0], LEVELS), 1)
+        vals = jnp.where(sel, cb[None, :], 0.0).sum(-1).reshape(codes.shape)
     return vals * scale_row.reshape(-1, 1, 1)
 
 
-def _kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest,
-            page: int, kh: int, g: int, qb: int, window: int,
-            softcap_val: float, scale: float, has_q2: bool,
-            has_codec: bool):
-    n = 0
+def _kernel(table_ref, len_ref, qlen_ref, q_ref, *rest,
+            page: int, logical: int, c: int, kh: int, g: int, qb: int,
+            window: int, softcap_val: float, scale: float, has_q2: bool,
+            has_codec: bool, dequant: str):
+    i = 0
+    k_refs = rest[i:i + c]
+    i += c
+    v_refs = rest[i:i + c]
+    i += c
     if has_q2:
-        q2_ref, k2_ref = rest[:2]
-        n = 2
+        q2_ref = rest[i]
+        i += 1
+        k2_refs = rest[i:i + c]
+        i += c
     if has_codec:
-        ks_ref, vs_ref = rest[n:n + 2]
-        n += 2
+        ks_refs = rest[i:i + c]
+        i += c
+        vs_refs = rest[i:i + c]
+        i += c
         if has_q2:
-            k2s_ref = rest[n]
-            n += 1
-        cb_ref = rest[n]
-        n += 1
-    o_ref, m_ref, l_ref, acc_ref = rest[n:]
+            k2s_refs = rest[i:i + c]
+            i += c
+        cb_ref = rest[i]
+        i += 1
+    o_ref, m_ref, l_ref, acc_ref = rest[i:]
     s_idx = pl.program_id(0)
     qb_idx = pl.program_id(1)
     j = pl.program_id(2)
@@ -116,25 +152,32 @@ def _kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # ---- decode this page's operands (in-kernel, codec path) -------------
+    # ---- decode this step's pages (in-kernel, codec path) ----------------
+    # each of the c page refs was DMA'd by its own BlockSpec; concatenating
+    # them gives one (c * page, KH, D) operand so the score einsum runs
+    # once over the whole group.
     if has_codec:
         cb = cb_ref[0]
-        k = _dequant(k_ref[0], ks_ref[0], cb)             # (page, KH, D)
-        v = _dequant(v_ref[0], vs_ref[0], cb)             # (page, KH, Dv)
+        k = jnp.concatenate([_dequant(r[0], s[0], cb, dequant)
+                             for r, s in zip(k_refs, ks_refs)])
+        v = jnp.concatenate([_dequant(r[0], s[0], cb, dequant)
+                             for r, s in zip(v_refs, vs_refs)])
     else:
-        k = k_ref[0].astype(jnp.float32)                  # (page, KH, D)
-        v = v_ref[0].astype(jnp.float32)                  # (page, KH, Dv)
+        k = jnp.concatenate([r[0].astype(jnp.float32) for r in k_refs])
+        v = jnp.concatenate([r[0].astype(jnp.float32) for r in v_refs])
 
-    # ---- one page of scores: (KH, G, qb, page) f32 -----------------------
+    # ---- one page group of scores: (KH, G, qb, c * page) f32 -------------
     q = q_ref[0].astype(jnp.float32).reshape(qb, kh, g, q_ref.shape[-1])
     s = jnp.einsum("qkgd,pkd->kgqp", q, k)
     if has_q2:
         q2 = q2_ref[0].astype(jnp.float32).reshape(
             qb, kh, g, q2_ref.shape[-1])
         if has_codec:
-            k2 = _dequant(k2_ref[0], k2s_ref[0], cb)
+            k2 = jnp.concatenate([_dequant(r[0], sc[0], cb, dequant)
+                                  for r, sc in zip(k2_refs, k2s_refs)])
         else:
-            k2 = k2_ref[0].astype(jnp.float32)
+            k2 = jnp.concatenate([r[0].astype(jnp.float32)
+                                  for r in k2_refs])
         s = s + jnp.einsum("qkgd,pkd->kgqp", q2, k2)
     if scale != 1.0:
         s = s * scale
@@ -144,20 +187,23 @@ def _kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest,
     # ---- per-token causal/position mask ----------------------------------
     # query token i of this block sits at absolute position
     # lengths[s] - q_lens[s] + (qb_idx * qb + i); tokens past q_lens[s]
-    # are ragged padding and attend nothing.
+    # are ragged padding and attend nothing.  Key row r of this group
+    # lives on logical page j * c + r // page at in-page row r % page —
+    # rows at or past the logical page length are layout padding.
     length = len_ref[s_idx]
     qlen = qlen_ref[s_idx]
     qi = qb_idx * qb + jax.lax.broadcasted_iota(
         jnp.int32, (1, 1, qb, 1), 2)
     qpos = (length - qlen) + qi
-    gpos = j * page + jax.lax.broadcasted_iota(
-        jnp.int32, (1, 1, 1, page), 3)
-    valid = (gpos <= qpos) & (qi < qlen)
+    r = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, c * page), 3)
+    row = r % page
+    gpos = (j * c + r // page) * logical + row
+    valid = (gpos <= qpos) & (qi < qlen) & (row < logical)
     if window:
         valid &= gpos > qpos - window
     s = jnp.where(valid, s, NEG_INF)
 
-    # ---- online softmax accumulation across pages ------------------------
+    # ---- online softmax accumulation across page groups ------------------
     m_prev = m_ref[...].reshape(kh, g, qb)
     m_new = jnp.maximum(m_prev, s.max(-1))
     alpha = jnp.exp(m_prev - m_new)
@@ -176,9 +222,20 @@ def _kernel(table_ref, len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest,
         o_ref[0] = jnp.moveaxis(out, 2, 0).reshape(o_ref.shape[1:])
 
 
+def _pad_last(x, width):
+    """Zero-pad x's last dim to ``width`` (no-op when already there).
+    Zero query columns meet zero key columns: the dot product is
+    bit-identical to the unpadded one (x + 0.0 == x in f32)."""
+    if x.shape[-1] == width:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, width - x.shape[-1])]
+    return jnp.pad(x, pad)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "softcap_val",
                                              "scale", "q_block",
-                                             "interpret"))
+                                             "page_size", "pages_per_step",
+                                             "dequant", "interpret"))
 def paged_mixed_attention(
     q: jax.Array,            # (S, Q, H, D)  padded per-slot query blocks
     k_pages: jax.Array,      # (n_pages, page, KH, D)   physical key pool
@@ -199,6 +256,10 @@ def paged_mixed_attention(
     q_block: int = 0,        # 0 = whole Q per grid step; non-divisors
     #                          round down to gcd(Q, q_block), same
     #                          convention as flash_attention's q_chunk
+    page_size: int = 0,      # logical tokens per page; 0 = the pools'
+    #                          physical page dim (i.e. no row padding)
+    pages_per_step: int = 1,  # physical pages DMA'd per grid step
+    dequant: str = "gather",  # codec lookup: "gather" | "onehot"
     interpret: bool = False,
 ) -> jax.Array:
     """out (S, Q, H, Dv) float32 — ragged mixed-step paged attention.
@@ -215,50 +276,75 @@ def paged_mixed_attention(
     page is decoded in VMEM against ``codebook`` and its per-token
     scale row before scoring.  Equivalent to decoding the whole pool
     up front, without ever materialising the fp pool.
+
+    Tiled pools: ``q``/``q2`` narrower than the pools' feature dims are
+    zero-padded up to them here (the caller slices the output back to
+    its model width), and ``page_size < k_pages.shape[1]`` declares the
+    trailing physical rows of every page to be layout padding.  The
+    output value width is the *pool's* ``Dv`` — callers using padded
+    value pools slice ``out[..., :dv_model]``.
     """
     s_n, qn, h, d = q.shape
     n_pages, page, kh, dk = k_pages.shape
     dv = v_pages.shape[-1]
-    assert dk == d, (dk, d)
+    logical = page_size or page
+    assert 0 < logical <= page, (logical, page)
+    assert dk >= d, (dk, d)
     assert h % kh == 0, (h, kh)
     g = h // kh
-    pps = table.shape[1]
-    qb = math.gcd(qn, q_block) if q_block else qn
+    q = _pad_last(q, dk)
+    c = max(int(pages_per_step), 1)
+    n_groups = -(-table.shape[1] // c)
+    if n_groups * c != table.shape[1]:
+        # pad the table with dummy-page entries so every grid step walks
+        # exactly c pages; the extra logical pages sit past the slot
+        # capacity, so every row of them is masked.
+        table = jnp.pad(table, ((0, 0), (0, n_groups * c - table.shape[1])))
+    qb = effective_q_block(qn, q_block)
     nqb = qn // qb
 
+    def walk(i, block):
+        # one BlockSpec per page of the group: page i of grid step j is
+        # physical page table[s, j * c + i]; Pallas pipelines the next
+        # step's c DMAs behind this step's compute.
+        return pl.BlockSpec(
+            block, lambda s, qi, j, t, ln, ql, i=i: (t[s, j * c + i],)
+            + (0,) * (len(block) - 1))
+
     in_specs = [
-        pl.BlockSpec((1, qb, h, d), lambda s, qi, j, t, ln, ql: (s, qi, 0, 0)),
-        pl.BlockSpec((1, page, kh, d),
-                     lambda s, qi, j, t, ln, ql: (t[s, j], 0, 0, 0)),
-        pl.BlockSpec((1, page, kh, dv),
-                     lambda s, qi, j, t, ln, ql: (t[s, j], 0, 0, 0)),
+        pl.BlockSpec((1, qb, h, dk),
+                     lambda s, qi, j, t, ln, ql: (s, qi, 0, 0)),
+        *[walk(i, (1, page, kh, dk)) for i in range(c)],
+        *[walk(i, (1, page, kh, dv)) for i in range(c)],
     ]
-    args = [q, k_pages, v_pages]
+    args = [q, *[k_pages] * c, *[v_pages] * c]
     if q2 is not None:
-        d2 = q2.shape[-1]
+        d2 = k2_pages.shape[-1]
+        q2 = _pad_last(q2, d2)
         in_specs += [
             pl.BlockSpec((1, qb, h, d2),
                          lambda s, qi, j, t, ln, ql: (s, qi, 0, 0)),
-            pl.BlockSpec((1, page, kh, d2),
-                         lambda s, qi, j, t, ln, ql: (t[s, j], 0, 0, 0)),
+            *[walk(i, (1, page, kh, d2)) for i in range(c)],
         ]
-        args += [q2, k2_pages]
+        args += [q2, *[k2_pages] * c]
     if k_scales is not None:
         # one scale row per physical page, walked through the page table
         # exactly like the pools themselves
-        sspec = pl.BlockSpec((1, page), lambda s, qi, j, t, ln, ql: (t[s, j], 0))
-        in_specs += [sspec, sspec]
-        args += [k_scales.astype(jnp.float32), v_scales.astype(jnp.float32)]
+        in_specs += [walk(i, (1, page)) for i in range(c)]
+        args += [k_scales.astype(jnp.float32)] * c
+        in_specs += [walk(i, (1, page)) for i in range(c)]
+        args += [v_scales.astype(jnp.float32)] * c
         if q2 is not None:
-            in_specs += [sspec]
-            args += [k2_scales.astype(jnp.float32)]
+            in_specs += [walk(i, (1, page)) for i in range(c)]
+            args += [k2_scales.astype(jnp.float32)] * c
         in_specs += [pl.BlockSpec((1, LEVELS),
                                   lambda s, qi, j, t, ln, ql: (0, 0))]
         args += [jnp.asarray(codebook, jnp.float32).reshape(1, LEVELS)]
+        assert dequant in ("gather", "onehot"), dequant
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(s_n, nqb, pps),
+        grid=(s_n, nqb, n_groups),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, qb, h, dv),
                                lambda s, qi, j, t, ln, ql: (s, qi, 0, 0)),
@@ -269,10 +355,11 @@ def paged_mixed_attention(
         ],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, page=page, kh=kh, g=g, qb=qb,
-                          window=window, softcap_val=softcap_val,
-                          scale=scale, has_q2=q2 is not None,
-                          has_codec=k_scales is not None),
+        functools.partial(_kernel, page=page, logical=logical, c=c, kh=kh,
+                          g=g, qb=qb, window=window,
+                          softcap_val=softcap_val, scale=scale,
+                          has_q2=q2 is not None,
+                          has_codec=k_scales is not None, dequant=dequant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((s_n, qn, h, dv), jnp.float32),
         compiler_params=pltpu.TPUCompilerParams(
@@ -298,6 +385,9 @@ def paged_decode_attention(
     window: int = 0,
     softcap_val: float = 0.0,
     scale: float = 1.0,
+    page_size: int = 0,
+    pages_per_step: int = 1,
+    dequant: str = "gather",
     interpret: bool = False,
 ) -> jax.Array:
     """out (S, H, Dv) float32 — single-token decode, the ``Q == 1``
@@ -309,5 +399,6 @@ def paged_decode_attention(
         None if q2 is None else q2[:, None], k2_pages,
         k_scales, v_scales, k2_scales, codebook,
         window=window, softcap_val=softcap_val, scale=scale,
-        interpret=interpret)
+        page_size=page_size, pages_per_step=pages_per_step,
+        dequant=dequant, interpret=interpret)
     return out[:, 0]

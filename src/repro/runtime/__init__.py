@@ -81,7 +81,11 @@ Compression on BNNs"), module by module:
   autotune             capacity recommendation: replay the materialize
                        access pattern over a capacity grid, find the
                        hit-rate-cliff knee (the launcher's
-                       ``--cache-mb auto``).
+                       ``--cache-mb auto``); kernel launch-shape tuning:
+                       time real paged-attention steps over a
+                       (q_block, pages_per_step) grid on the live
+                       model/page shapes, memoised per (arch, page, Q)
+                       (the launcher's ``--kernel-tune auto``).
   ===================  ====================================================
 
 The module <-> paper-structure mapping, with the request lifecycle
@@ -94,7 +98,7 @@ bit-identical (tests/test_runtime.py round-trip).
 """
 
 from repro.runtime.autotune import (find_knee, recommend_store_capacity,
-                                    sweep_store)
+                                    sweep_store, tune_kernel)
 from repro.runtime.decode_cache import (DecodeTileCache, EvictionPolicy,
                                         FrequencyWeightedPolicy, LFUPolicy,
                                         LRUPolicy, make_policy)
@@ -135,4 +139,5 @@ __all__ = [
     "parse_prom",
     "recommend_store_capacity",
     "sweep_store",
+    "tune_kernel",
 ]

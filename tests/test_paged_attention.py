@@ -258,7 +258,8 @@ class TestKernelBackendHotPath:
         sched.submit(prompts[0], 6)
         out1 = sched.run()
         assert len(out1) == 1
-        key = (sched._pool.paged_flags, sched._pool.page_size, 1, False)
+        key = (sched._pool.paged_flags, sched._pool.page_size, 1, False,
+               0, 1)
         c0 = engine._mixed_jits[key]._cache_size()
         sched._pool.grow_pages(9)
         sched.submit(prompts[1], 6)
