@@ -243,12 +243,12 @@ def serve_identity(smoke: bool, seed: int) -> dict:
           f"launches {list(launches)}")
     report = {}
     for kv_codec in ("none", "cluster"):
-        # chunked prefill exercises the mixed-step path; under the
-        # cluster codec the *gathered* backend's chunked install
-        # re-encodes pages (a lossy round trip the in-pool mixed-step
-        # write never does — pre-existing PR-8 behaviour), so the
-        # cross-backend oracle comparison runs monolithic there
-        chunk = {} if kv_codec == "cluster" else dict(prefill_chunk=4)
+        # chunked prefill exercises the mixed-step path; the gathered
+        # backend's chunked install now quantises rows through the codec
+        # before attention (same fixed point the in-pool mixed-step
+        # write reaches), so the cross-backend oracle runs chunked under
+        # both codecs
+        chunk = dict(prefill_chunk=4)
         toks = {}
         for label, kw in launches.items():
             engine = ServeEngine(cfg, params, compress=True)

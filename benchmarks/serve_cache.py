@@ -1,6 +1,6 @@
 """Decode-tile cache benchmarks: capacity sweep + trace replay + slot batching.
 
-Eight sections:
+Ten sections:
 
 1. **Capacity sweep** (default): the paper's §IV cache cliff on a real
    WeightStore — during batched decoding every step touches every tile of
@@ -61,6 +61,25 @@ Eight sections:
    table reports the effective-capacity multiplier plus how many
    fully-backed slots one fixed HBM budget holds under each codec.
 
+9. **Prefix sharing** (``--trace``/``--smoke``): the checked-in
+   multi-tenant shared-prefix trace replayed with ``prefix_share`` off
+   vs on — token-identical by assertion, with the accounting identity
+   ``chunk_tokens(on) + tokens_reused == chunk_tokens(off)`` pinning
+   that every reused token is prefill work the off run actually paid.
+
+10. **Speculative decoding** (``--trace``/``--smoke``): the checked-in
+    repetition-heavy trace (``benchmarks/traces/repetition.jsonl``)
+    served with ``speculate="ngram"`` vs ``"off"`` across backend/codec
+    cells — token-identical by assertion (greedy verification), drafts
+    accepted and decode steps strictly reduced everywhere, and >= 1.2x
+    tokens/s on the single-phase ``pallas_paged`` cell (asserted on the
+    full run at the default seed).
+
+``--out report.json`` dumps every section's headline numbers (tokens/s,
+TTFT, hit/acceptance rates, compression multipliers) as one JSON report;
+the checked-in ``BENCH_serve.json`` is generated this way and refreshed
+by CI as a build artifact.
+
 Real traffic traces: ``--trace-file path.jsonl`` replays a recorded
 trace (one JSON object per line: ``arrival_time`` seconds, ``prompt_len``,
 ``decode_len``, ``tenant``) through the same policy sweep the synthetic
@@ -96,6 +115,11 @@ from repro.runtime.autotune import DEFAULT_FRACTIONS, find_knee
 SAMPLE_TRACE = pathlib.Path(__file__).parent / "traces" / "sample.jsonl"
 SHARED_PREFIX_TRACE = (pathlib.Path(__file__).parent / "traces"
                        / "shared_prefix.jsonl")
+REPETITION_TRACE = (pathlib.Path(__file__).parent / "traces"
+                    / "repetition.jsonl")
+
+# per-section headline numbers, dumped by --out as BENCH_serve.json
+REPORT: dict = {}
 
 LAYERS = 4
 D, F = 288, 512
@@ -336,6 +360,9 @@ def trace_replay(smoke: bool, trace: Trace | None = None,
         worst = margin if worst is None else min(worst, margin)
     print(f"\nFrequencyWeighted - LRU hit-rate margin, worst capacity: "
           f"{worst * 100:+.1f} pts")
+    REPORT.setdefault("trace_replay", {})[label] = dict(
+        requests=len(trace.requests),
+        freq_minus_lru_worst_pts=round(worst * 100, 2))
     # the synthetic replay is fully deterministic (seeded trace, no
     # timing), so the paper-skew claim is a hard invariant CI can
     # enforce on the default seed; recorded traces and alternate seeds
@@ -349,14 +376,15 @@ def trace_replay(smoke: bool, trace: Trace | None = None,
 # chunked vs monolithic prefill on a mixed long/short prompt trace
 # ---------------------------------------------------------------------------
 
-def _reduced_lm():
+def _reduced_lm(vocab_size: int = 128):
     import jax
     from repro.configs.base import get_config
     from repro.models.api import get_model
 
     cfg = get_config("minitron-8b").scaled(
-        dtype="float32", vocab_size=128, num_layers=2, scan_repeats=2,
-        d_model=64, num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128)
+        dtype="float32", vocab_size=vocab_size, num_layers=2,
+        scan_repeats=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=128)
     params = jax.tree_util.tree_map(
         np.asarray, get_model(cfg).init_params(cfg, jax.random.PRNGKey(0)))
     return cfg, params
@@ -425,6 +453,11 @@ def prefill_compare(smoke: bool, seed: int = 0) -> None:
     speedup = results["monolithic"][0] / max(results["chunked"][0], 1e-9)
     print(f"  short-request time-to-first-token: {speedup:.1f}x faster "
           f"chunked (token-identical outputs)")
+    REPORT["prefill_compare"] = {
+        label: dict(ttft_short_ms=round(results[label][0] * 1000, 1),
+                    ttft_long_ms=round(results[label][1] * 1000, 1),
+                    tok_s=round(results[label][2], 2))
+        for label in ("monolithic", "chunked")}
     # deterministic in structure, robust in time: a short prompt's first
     # token needs 1 chunk + its own prefill, not a neighbour's whole
     # long-prompt prefill
@@ -507,6 +540,11 @@ def backend_compare(smoke: bool, seed: int = 0) -> None:
         "install-path prefill copies were not accounted"
     print("  pallas_paged moved 0 gather/scatter bytes; mixed-step also "
           "moved 0 prefill install bytes (token-identical outputs)")
+    REPORT["backend_compare"] = {
+        label: dict(ms_per_step=round(results[label][0], 2),
+                    kv_gather_bytes=results[label][1],
+                    kv_prefill_gather_bytes=results[label][4])
+        for label in configs}
 
 
 # ---------------------------------------------------------------------------
@@ -617,6 +655,12 @@ def kv_codec_compare(smoke: bool, seed: int = 0) -> None:
           f"-> {slots_cl} cluster slots "
           f"({r['page_fp'] / r['page_res']:.2f}x resident compression, "
           f"error bound {r['err']:.2e})")
+    REPORT["kv_codec_compare"] = {
+        label.replace("/", "_"): dict(
+            tok_s=round(rr["tok_s"], 2),
+            page_compression=round(rr["page_fp"] / rr["page_res"], 3),
+            agreement=round(agreement(rr["toks"]), 4))
+        for label, rr in results.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -701,6 +745,132 @@ def prefix_share_compare(smoke: bool, seed: int = 0) -> None:
     print(f"  {on['reused']} prompt tokens served from cached pages "
           f"({on['avoided']} chunks avoided, {on['cow']} copy-on-write "
           f"copies); token-identical outputs")
+    REPORT["prefix_share_compare"] = {
+        label: dict(tok_s=round(results[label]["tok_s"], 2),
+                    ttft_ms=round(results[label]["ttft"] * 1000, 1),
+                    tokens_reused=results[label]["reused"],
+                    cow_copies=results[label]["cow"])
+        for label in ("off", "on")}
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: ngram drafter vs plain decode on a repetitive trace
+# ---------------------------------------------------------------------------
+
+def speculative_compare(smoke: bool, seed: int = 0) -> None:
+    """Speculative decoding (``speculate="ngram"``) vs plain decode on the
+    checked-in repetition-heavy trace (benchmarks/traces/repetition.jsonl:
+    short tiled prompts, long decode budgets).  Greedy verification makes
+    speculation token-identical by construction — asserted per cell — so
+    the whole comparison is about decode steps: every accepted draft token
+    is one verify row instead of one full scheduler iteration.  The drafter
+    pays off exactly when the token stream is predictable (here: tiled
+    prompts steer the reduced model into its argmax attractor cycles,
+    which the n-gram matcher then predicts), which is the workload the
+    trace encodes; on incompressible streams acceptance drops and ``off``
+    wins, hence the dedicated trace rather than the random mixes the other
+    sections use.  The deterministic invariant (fewer decode steps, drafts
+    accepted) is asserted everywhere; the wall-clock >= 1.2x tokens/s
+    claim only on the full run at the default seed, on the single-phase
+    ``pallas_paged`` cell where verification rides the same ragged
+    mixed-step invocation as plain decode.  The model is the reduced
+    minitron at ``vocab_size=8`` — narrow enough that greedy decode
+    settles into its argmax attractor cycles (the predictable-stream
+    regime speculation targets) instead of the near-random wander of the
+    128-token vocabulary the other sections use."""
+    from repro.runtime import Scheduler, ServeEngine
+
+    cfg, params = _reduced_lm(vocab_size=8)
+    rng = np.random.default_rng(seed)
+    trace = load_trace_file(REPETITION_TRACE)
+    rows = trace.requests[:4] if smoke else trace.requests
+    reqs = []
+    for r in rows:
+        pat = rng.integers(0, cfg.vocab_size, 3)
+        reps = -(-r.prompt_len // len(pat))          # ceil division
+        prompt = np.tile(pat, reps)[:r.prompt_len]
+        reqs.append((prompt, max(6, r.gen // 8) if smoke else r.gen))
+    slot_len = max(len(p) + g for p, g in reqs)
+    print(f"\nspeculative decoding: {len(reqs)} requests "
+          f"(decode {min(g for _, g in reqs)}..{max(g for _, g in reqs)}), "
+          f"batch 2, draft k=4, reduced minitron-8b  [repetition.jsonl]")
+    print(f"{'backend/codec':>20} | {'spec':>5} | {'tok/s':>7} | "
+          f"{'steps':>5} | {'accept':>6} | {'steps/tok':>9}")
+
+    cells = {
+        "gathered/none": dict(attn_backend="gathered", kv_page_size=4),
+        "pallas_paged/none": dict(attn_backend="pallas_paged",
+                                  kv_page_size=4, prefill_chunk=4),
+        "pallas_paged/cluster": dict(attn_backend="pallas_paged",
+                                     kv_page_size=4, prefill_chunk=4,
+                                     kv_codec="cluster"),
+    }
+    reps_n = 1 if smoke else 3
+    results = {}
+    for label, kw in cells.items():
+        for spec in ("off", "ngram"):
+            engine = ServeEngine(cfg, params, compress=True)
+            sched = Scheduler(engine, batch_size=2, slot_len=slot_len,
+                              buckets=(128,), speculate=spec, draft_k=4,
+                              **kw)
+            sched.submit(reqs[0][0], 2)              # warmup compile
+            sched.run()
+            best = None
+            for _ in range(reps_n):                  # best-of-N de-noises
+                engine.metrics = type(engine.metrics)()
+                for prompt, gen in reqs:
+                    sched.submit(prompt, gen)
+                done = sched.run()
+                assert len(done) == len(reqs)
+                m = engine.metrics
+                total = sum(len(r.generated) for r in done)
+                rep = dict(
+                    toks=tuple(tuple(r.generated) for r in
+                               sorted(done, key=lambda r: r.rid)
+                               [-len(reqs):]),
+                    tok_s=m.tokens_per_s(), steps=m.decode_steps,
+                    accept=m.spec_acceptance_rate(),
+                    spt=m.decode_steps / max(total, 1))
+                if best is None or rep["tok_s"] > best["tok_s"]:
+                    best = rep
+            results[label, spec] = best
+            print(f"{label:>20} | {spec:>5} | {best['tok_s']:>7.1f} | "
+                  f"{best['steps']:>5} | {best['accept'] * 100:>5.0f}% | "
+                  f"{best['spt']:>9.2f}")
+
+    for label in cells:
+        off, ngram = results[label, "off"], results[label, "ngram"]
+        # greedy verification is the oracle: every emitted token is the
+        # model's own argmax, so outputs must match token for token
+        assert ngram["toks"] == off["toks"], \
+            f"{label}: speculation changed generated tokens"
+        assert ngram["accept"] > 0, f"{label}: no draft tokens accepted"
+        # deterministic (no timing): accepted drafts collapse scheduler
+        # iterations, and amortise to < 1 verify step per emitted token
+        assert ngram["steps"] < off["steps"], \
+            f"{label}: speculation did not reduce decode steps"
+        assert ngram["spt"] < 1.0, \
+            f"{label}: {ngram['spt']:.2f} verify steps per token"
+    off = results["pallas_paged/none", "off"]
+    ngram = results["pallas_paged/none", "ngram"]
+    speedup = ngram["tok_s"] / max(off["tok_s"], 1e-9)
+    print(f"  pallas_paged/none ngram/off tokens/s: {speedup:.2f}x at "
+          f"{ngram['accept'] * 100:.0f}% acceptance "
+          f"({ngram['spt']:.2f} steps/token; token-identical outputs)")
+    REPORT["speculative"] = {
+        label.replace("/", "_"): dict(
+            tok_s_off=round(results[label, "off"]["tok_s"], 2),
+            tok_s_ngram=round(results[label, "ngram"]["tok_s"], 2),
+            acceptance=round(results[label, "ngram"]["accept"], 4),
+            steps_per_token=round(results[label, "ngram"]["spt"], 4))
+        for label in cells}
+    REPORT["speculative"]["speedup_pallas_none"] = round(speedup, 3)
+    # wall-clock claim, gated like trace_replay's skew invariant: full
+    # run, default seed (smoke decode budgets are too small to amortise
+    # the drafter's host work)
+    if not smoke and seed == 0:
+        assert speedup >= 1.2, \
+            f"ngram speculation {speedup:.2f}x < 1.2x on repetition trace"
 
 
 # ---------------------------------------------------------------------------
@@ -834,6 +1004,11 @@ def slot_vs_wave(smoke: bool, seed: int = 0) -> None:
     speedup = results["continuous"][0] / max(results["wave"][0], 1e-9)
     print(f"  continuous/wave tokens/s: {speedup:.2f}x "
           f"(token-identical outputs)")
+    REPORT["slot_vs_wave"] = {
+        mode: dict(tok_s=round(results[mode][0], 2),
+                   occupancy=round(results[mode][1], 4),
+                   decode_steps=results[mode][2])
+        for mode in ("continuous", "wave")}
 
 
 def main():
@@ -874,6 +1049,11 @@ def main():
     ap.add_argument("--metrics-out", type=str, default=None,
                     help="write the telemetry section's Prometheus text "
                          "exposition here (CI validates it re-parses)")
+    ap.add_argument("--out", type=str, default=None,
+                    help="write each section's headline numbers (tokens/s, "
+                         "TTFT, hit/acceptance rates, compression "
+                         "multipliers) as one JSON report — the checked-in "
+                         "BENCH_serve.json is generated this way")
     args = ap.parse_args()
 
     if args.autotune:
@@ -904,9 +1084,16 @@ def main():
         backend_compare(smoke=args.smoke, seed=args.seed)
         kv_codec_compare(smoke=args.smoke, seed=args.seed)
         prefix_share_compare(smoke=args.smoke, seed=args.seed)
+        speculative_compare(smoke=args.smoke, seed=args.seed)
         telemetry_smoke(smoke=args.smoke, seed=args.seed,
                         trace_out=args.trace_out,
                         metrics_out=args.metrics_out)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(REPORT, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"\nheadline numbers ({len(REPORT)} sections) -> "
+                  f"{args.out}")
         return
     capacity_sweep(args.steps)
 

@@ -147,11 +147,30 @@ def main():
                          "token-identical to serving each request "
                          "privately (needs --kv-page-size and "
                          "--prefill-chunk)")
+    ap.add_argument("--prompt-pattern", type=int, default=0,
+                    help="tile each request's prompt from its own "
+                         "repeating pattern of this many tokens (0 = "
+                         "fully random prompts); repetitive prompts are "
+                         "the regime where --speculate ngram pays, since "
+                         "the drafter continues patterns the history "
+                         "already contains")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="generate request prompts sharing a common "
                          "prefix of this many tokens (0 = fully random "
                          "prompts); pair with --prefix-share to see "
                          "reuse, or without it for the baseline")
+    ap.add_argument("--speculate", default="off",
+                    help="speculative decoding drafter: 'off' (default), "
+                         "'ngram' (prompt/history n-gram matcher, no "
+                         "extra weights), or 'draft'/'draft:<arch>' (a "
+                         "tiny draft model sharing the engine's weight "
+                         "store).  Each slot proposes up to --draft-k "
+                         "tokens per step, verified in the same ragged "
+                         "batched invocation; greedy verification is "
+                         "token-identical to --speculate off")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max draft tokens proposed per slot per step "
+                         "(bounds the verify width at 1 + k)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable async next-layer tile prefetch")
     ap.add_argument("--no-compress", action="store_true",
@@ -222,13 +241,19 @@ def main():
                           kv_codec=args.kv_codec,
                           prefix_share=args.prefix_share,
                           kernel_tune=args.kernel_tune,
+                          speculate=args.speculate,
+                          draft_k=args.draft_k,
                           log_every=args.log_every)
         rng = np.random.default_rng(0)
         shared_len = min(args.shared_prefix_len, args.prompt_len - 1)
         common = rng.integers(0, cfg.vocab_size, max(shared_len, 0))
         for _ in range(n_requests):
-            tail = rng.integers(0, cfg.vocab_size,
-                                args.prompt_len - len(common))
+            tail_len = args.prompt_len - len(common)
+            if args.prompt_pattern:
+                pat = rng.integers(0, cfg.vocab_size, args.prompt_pattern)
+                tail = np.tile(pat, -(-tail_len // len(pat)))[:tail_len]
+            else:
+                tail = rng.integers(0, cfg.vocab_size, tail_len)
             sched.submit(np.concatenate([common, tail]), args.gen)
 
         t0 = time.monotonic()
@@ -320,6 +345,12 @@ def main():
         if engine.store.prefetch_dispatched:
             print(f"tile prefetch: {engine.store.prefetch_dispatched} "
                   f"dispatched, {engine.store.prefetch_used} consumed")
+    if m.spec_rounds:
+        total = sum(len(r.generated) for r in completed)
+        print(f"speculative ({sched.speculate}, k={sched.draft_k}): "
+              f"{m.spec_accepted_tokens}/{m.spec_draft_tokens} draft "
+              f"tokens accepted ({m.spec_acceptance_rate() * 100:.0f}%), "
+              f"{m.decode_steps / max(total, 1):.2f} verify steps/token")
     print("sample token ids:", completed[0].generated[:16])
 
     if telemetry is not None and telemetry.tracing:

@@ -37,6 +37,13 @@ class ModelAPI:
     # chunk, one decode token, or nothing — against the shared page pools
     # (decode is the Q == 1 special case).  None when the family cannot
     # consume a paged cache (encoder-decoder)
+    verify_step: Callable[..., Any] | None = None
+    # (cfg, params, cache, tokens (B, S), pos, q_lens, *, kv_quant)
+    #   -> (full logits (B, S, V), new cache);
+    # speculative verification on a lane cache: prefill_chunk's ragged
+    # sibling that keeps every position's logits so the scheduler can
+    # accept/reject draft tokens.  None when the family cannot resume a
+    # prompt mid-cache (encoder-decoder)
 
 
 # TPU register tiles for f32 operands: the memory system moves (sublane,
@@ -77,18 +84,21 @@ def padded_page_dims(shape, len_axis: int, page_size: int,
 # mixed_step, whose Pallas kernel walks the table in-kernel
 ATTN_BACKENDS = ("gathered", "pallas_paged")
 
-# block kinds whose caches can resume a prompt mid-prefill (attention-style
-# KV caches); recurrent states (ssm / rglru) and cross-attention decoders
-# cannot, so configs containing them fall back to monolithic prefill
+# block kinds whose caches can resume a prompt mid-prefill: attention-style
+# KV caches resume by construction, and the recurrent kinds (ssm / rglru)
+# resume by seeding their scan from the cached recurrent state; only
+# cross-attention decoders (encoder-decoder) fall back to monolithic prefill
 CHUNKABLE_KINDS = frozenset(
     ("attn", "swa", "local", "global", "attn_local",
-     "mla_dense", "mla_moe", "swa_moe", "moe"))
+     "mla_dense", "mla_moe", "swa_moe", "moe", "ssm", "rglru"))
 
 # block kinds the paged decode-attention backend can serve: attention-style
 # caches (full-length leaves page; rolling-window leaves stay lanes and run
 # the reference path in the same step); recurrent state and cross-attention
 # decoders have no paged equivalent and fall back to "gathered"
-PAGEABLE_KINDS = CHUNKABLE_KINDS
+PAGEABLE_KINDS = frozenset(
+    ("attn", "swa", "local", "global", "attn_local",
+     "mla_dense", "mla_moe", "swa_moe", "moe"))
 
 
 def supports_chunked_prefill(cfg) -> bool:
@@ -100,6 +110,15 @@ def supports_chunked_prefill(cfg) -> bool:
     kinds = (tuple(cfg.prefix_kinds) + tuple(cfg.scan_pattern)
              + tuple(cfg.suffix_kinds))
     return all(k in CHUNKABLE_KINDS for k in kinds)
+
+
+def supports_speculation(cfg) -> bool:
+    """True if ``cfg`` can decode speculatively: draft tokens are verified
+    by the same resume-from-cache machinery chunked prefill uses (the
+    ragged :func:`transformer.verify_step` / ``mixed_step`` paths), so the
+    gate is identical — every block resumes mid-cache and there is no
+    multimodal prefix."""
+    return supports_chunked_prefill(cfg)
 
 
 def supports_paged_attention(cfg) -> bool:
@@ -188,6 +207,7 @@ def get_model(cfg) -> ModelAPI:
             init_cache=encdec.init_cache,
             prefill_chunk=None,
             mixed_step=None,
+            verify_step=None,
         )
     return ModelAPI(
         init_params=transformer.init_params,
@@ -199,4 +219,5 @@ def get_model(cfg) -> ModelAPI:
         init_cache=transformer.init_cache,
         prefill_chunk=transformer.prefill_chunk,
         mixed_step=transformer.mixed_step,
+        verify_step=transformer.verify_step,
     )

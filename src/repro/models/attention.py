@@ -310,6 +310,25 @@ def chunk_attention(
     return out.reshape(b, s, h, vv.shape[-1])
 
 
+def _codec_roundtrip(x: jax.Array, axes: tuple) -> jax.Array:
+    """Quantise ``x`` onto the ``kv_codec="cluster"`` codebook and decode
+    it straight back (one scale per the block trailing ``axes``).
+
+    The gathered backend's chunked prefill uses this to reproduce the
+    ``pallas_paged`` mixed step's numerics exactly: the kernel path
+    encodes each chunk's K/V into the code pools and attends to the
+    *decoded* codes, so later chunks see quantised keys.  Round-tripping
+    here makes the standalone-chunk oracle see the same values — and
+    because the codec encode is idempotent (``encode(decode(encode(x)))
+    == encode(x)``), the install-time re-encode then lands bit-identical
+    codes in the pool."""
+    from repro.kernels import kv_codec
+    codes, sc = kv_codec.encode(x, axes)
+    rest = codes.ndim - sc.ndim
+    return kv_codec.decode(
+        codes, sc.reshape(*sc.shape, *(1,) * rest)).astype(x.dtype)
+
+
 def _rolling_slot_positions(pos, smax: int) -> jax.Array:
     """Absolute position held by each physical slot of a rolling cache
     *before* positions >= ``pos`` are written (negative = never written).
@@ -385,6 +404,9 @@ def attn_apply(
     scales: dict | None = None,       # kv_codec="cluster": {"k","v"} scale
     #                                    pools (n_pages, page) f32; implies
     #                                    paged + int8 code pools
+    kv_quant: bool = False,           # kv_codec="cluster" on a *lane* cache:
+    #                                    round-trip chunk K/V through the
+    #                                    codec so install re-encodes losslessly
 ) -> tuple[jax.Array, dict | None]:
     """-> (y, new_cache); with ``scales`` -> (y, new_cache, new_scales)."""
     b, s, _ = x.shape
@@ -448,6 +470,12 @@ def attn_apply(
         q, k, v = _qkv(p, x, cfg, positions)
         smax = cache["k"].shape[1]
         rolling = bool(window)
+        if kv_quant and not rolling:
+            # rolling-window lanes stay raw under the kernel backend too
+            # (their pages never enter the code pools), so only full-history
+            # lanes quantise here.
+            k = _codec_roundtrip(k, (-2, -1))
+            v = _codec_roundtrip(v, (-2, -1))
         if rolling:
             k_pos = _rolling_slot_positions(pos, smax)
         else:
@@ -468,6 +496,12 @@ def attn_apply(
         if jnp.ndim(pos) == 0:           # shared position (wave decode)
             positions = jnp.full((b, 1), pos, jnp.int32)
             q, k, v = _qkv(p, x, cfg, positions)
+            if kv_quant and not rolling:
+                # quantise-then-attend, matching the kernel backend: the
+                # new row's key/value enter this step's softmax already
+                # on the codebook, exactly as every later step sees them
+                k = _codec_roundtrip(k, (-2, -1))
+                v = _codec_roundtrip(v, (-2, -1))
             slot = pos % cache["k"].shape[1] if rolling else pos
             k_cache = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
@@ -476,6 +510,9 @@ def attn_apply(
         else:                            # (B,) per-lane positions
             positions = jnp.asarray(pos, jnp.int32)[:, None]
             q, k, v = _qkv(p, x, cfg, positions)
+            if kv_quant and not rolling:
+                k = _codec_roundtrip(k, (-2, -1))
+                v = _codec_roundtrip(v, (-2, -1))
             slot = positions[:, 0] % cache["k"].shape[1] if rolling \
                 else positions[:, 0]
             lane = jnp.arange(b)
@@ -571,7 +608,7 @@ def mla_init(key, cfg, dtype) -> dict:
 
 
 def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None, q_lens=None,
-              scales=None):
+              scales=None, kv_quant=False):
     """-> (y, new_cache); with ``scales`` -> (y, new_cache, new_scales)."""
     b, s, d = x.shape
     h = cfg.num_heads
@@ -645,10 +682,28 @@ def mla_apply(p, x, cfg, *, cache=None, pos=None, paged=None, q_lens=None,
         return y, new_cache
 
     if decode:
-        c_cache = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
-        pe_cache = jax.lax.dynamic_update_slice(
-            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, pos, 0))
+        if kv_quant:
+            c_kv = _codec_roundtrip(c_kv, (-1,))
+            k_pe = _codec_roundtrip(k_pe, (-1,))
+        if q_lens is None:
+            c_cache = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+            pe_cache = jax.lax.dynamic_update_slice(
+                cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, pos, 0))
+        else:
+            # ragged speculative verification: only rows < q_lens are real
+            # — rejected-draft and padding rows are routed out of bounds
+            # and dropped, so the cache never sees them (a q_lens == 0
+            # lane is an exact no-op)
+            ql = jnp.asarray(q_lens, jnp.int32)
+            rows = pos + jnp.arange(s)[None, :]               # (1, S)
+            rows = jnp.where(jnp.arange(s)[None, :] < ql[:, None],
+                             rows, cache["c_kv"].shape[1])
+            lane = jnp.arange(b)[:, None]
+            c_cache = cache["c_kv"].at[lane, rows].set(
+                c_kv.astype(cache["c_kv"].dtype), mode="drop")
+            pe_cache = cache["k_pe"].at[lane, rows].set(
+                k_pe.astype(cache["k_pe"].dtype), mode="drop")
         # absorbed attention in latent space
         w_uk = p["w_uk"].reshape(r_kv, h, dn)
         q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),

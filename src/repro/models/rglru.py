@@ -33,13 +33,21 @@ def rglru_init(key, cfg, dtype) -> dict:
     }
 
 
-def _conv(x, conv_w, state=None):
+def _conv(x, conv_w, state=None, q_lens=None):
     k = conv_w.shape[0]
     pad = (jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
-           if state is None else state)
+           if state is None else state.astype(x.dtype))
     full = jnp.concatenate([pad, x], axis=1)
     out = sum(full[:, i:i + x.shape[1]] * conv_w[i] for i in range(k))
-    return out, full[:, -(k - 1):]
+    if q_lens is None:
+        new_state = full[:, -(k - 1):]
+    else:
+        # ragged: read each lane's carried-out state at its own valid
+        # length (q_lens[b] == 0 returns the incoming state unchanged)
+        idx = (jnp.asarray(q_lens, jnp.int32)[:, None]
+               + jnp.arange(k - 1)[None, :])
+        new_state = jnp.take_along_axis(full, idx[..., None], axis=1)
+    return out, new_state
 
 
 def _gates(p, xw):
@@ -51,20 +59,33 @@ def _gates(p, xw):
     return a, gated
 
 
-def rglru_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None):
-    """cache = {"conv": (B, 3, W), "h": (B, W)}."""
+def rglru_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None,
+                q_lens=None):
+    """cache = {"conv": (B, 3, W), "h": (B, W)}.
+
+    With ``cache`` and ``pos`` the recurrence *resumes* from the cached
+    state (chunked prefill / speculative verification): the scan's prefix
+    products fold the incoming ``cache["h"]`` into every position via
+    ``h_t = h_scan_t + (prod a_1..a_t) * h_0``.  Ragged ``q_lens`` masks
+    padded positions to the identity update (``a = 1``, input 0), so a
+    ``q_lens[b] == 0`` lane is an exact no-op on its cache.
+    """
     b, s, _ = x.shape
-    decode = cache is not None and s == 1
-    if cache is not None and pos is not None and s > 1:
-        raise NotImplementedError(
-            "chunked prefill is not supported for RG-LRU blocks (the "
-            "recurrence cannot resume from a cached state mid-prompt yet)")
+    decode = cache is not None and s == 1 and q_lens is None
+    resume = cache is not None and pos is not None and not decode
 
     gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
     xw = x @ p["w_x"]
     xw = constrain(xw, "batch", None, "model")   # recurrence shards on width
-    xw, new_conv = _conv(xw, p["conv_w"], cache["conv"] if decode else None)
+    xw, new_conv = _conv(xw, p["conv_w"],
+                         cache["conv"] if (decode or resume) else None,
+                         q_lens=q_lens)
     a, gated = _gates(p, xw)
+    if q_lens is not None:
+        valid = (jnp.arange(s)[None, :, None] <
+                 jnp.asarray(q_lens, jnp.int32)[:, None, None])  # (B, S, 1)
+        a = jnp.where(valid, a, 1.0)
+        gated = jnp.where(valid, gated, 0.0)
 
     if decode:
         h = cache["h"] * a[:, 0] + gated[:, 0]
@@ -77,6 +98,8 @@ def rglru_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None):
             return a1 * a2, b1 * a2 + b2
 
         a_sc, h_sc = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        if resume:
+            h_sc = h_sc + a_sc * cache["h"].astype(jnp.float32)[:, None]
         y = h_sc
         new_cache = None
         if cache is not None:

@@ -50,24 +50,33 @@ def _split_proj(cfg, z_all):
     return z, xbc, dt  # gate, conv-input, dt (.., h)
 
 
-def _causal_conv(xbc, conv_w, state=None):
+def _causal_conv(xbc, conv_w, state=None, q_lens=None):
     """Depthwise causal conv over time. xbc (B, S, C); conv_w (K, C).
-    state (B, K-1, C) carries context across decode steps."""
+    state (B, K-1, C) carries context across decode steps.  With ragged
+    ``q_lens`` the carried-out state is read at each lane's own valid
+    length (``q_lens[b] == 0`` returns the incoming state unchanged)."""
     k = conv_w.shape[0]
     if state is None:
         pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
     else:
-        pad = state
+        pad = state.astype(xbc.dtype)
     full = jnp.concatenate([pad, xbc], axis=1)
     out = sum(full[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
-    new_state = full[:, -(k - 1):]
+    if q_lens is None:
+        new_state = full[:, -(k - 1):]
+    else:
+        idx = (jnp.asarray(q_lens, jnp.int32)[:, None]
+               + jnp.arange(k - 1)[None, :])
+        new_state = jnp.take_along_axis(full, idx[..., None], axis=1)
     return jax.nn.silu(out), new_state
 
 
-def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+def ssd_chunked(x, dt, a_log, b, c, chunk: int, init=None):
     """Chunked SSD scan.
 
     x (B, S, H, P); dt (B, S, H) post-softplus; b, c (B, S, G, N).
+    ``init`` (B, H, P, N) seeds the inter-chunk recurrence (resuming the
+    scan from a cached state); None starts from zeros.
     Returns (y (B, S, H, P), final_state (B, H, P, N)).
     """
     bsz, s, h, p_dim = x.shape
@@ -108,7 +117,10 @@ def ssd_chunked(x, dt, a_log, b, c, chunk: int):
         h_new = h_prev * dec[..., None, None] + st
         return h_new, h_prev
 
-    init = jnp.zeros((bsz, h, p_dim, bc.shape[-1]), jnp.float32)
+    if init is None:
+        init = jnp.zeros((bsz, h, p_dim, bc.shape[-1]), jnp.float32)
+    else:
+        init = init.astype(jnp.float32)
     final, h_init = jax.lax.scan(
         step, init,
         (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
@@ -123,24 +135,37 @@ def ssd_chunked(x, dt, a_log, b, c, chunk: int):
     return y, final
 
 
-def ssm_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None):
-    """Mamba2 mixer. cache = {"conv": (B,K-1,C), "state": (B,H,P,N)}."""
+def ssm_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None,
+              q_lens=None):
+    """Mamba2 mixer. cache = {"conv": (B,K-1,C), "state": (B,H,P,N)}.
+
+    With ``cache`` and ``pos`` the chunked scan *resumes* from the cached
+    recurrent state (chunked prefill / speculative verification) instead of
+    restarting — the inter-chunk recurrence is seeded with ``cache["state"]``
+    and the conv context with ``cache["conv"]``.  Ragged ``q_lens`` marks
+    each lane's valid length: padded positions get ``dt = 0`` (decay 1,
+    zero input — the state passes through untouched) and the carried-out
+    conv state is read at the lane's own length, so a ``q_lens[b] == 0``
+    lane is an exact no-op on its cache.
+    """
     bsz, s, _ = x.shape
     d_in = cfg.expand * cfg.d_model
     h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
     p_dim = d_in // h
-    decode = cache is not None and s == 1
-    if cache is not None and pos is not None and s > 1:
-        raise NotImplementedError(
-            "chunked prefill is not supported for SSM blocks (the prefill "
-            "scan cannot resume from a cached recurrent state yet)")
+    decode = cache is not None and s == 1 and q_lens is None
+    resume = cache is not None and pos is not None and not decode
 
     z_all = x @ p["in_proj"]
     z, xbc, dt = _split_proj(cfg, z_all)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if q_lens is not None:
+        valid = (jnp.arange(s)[None, :] <
+                 jnp.asarray(q_lens, jnp.int32)[:, None])     # (B, S)
+        dt = jnp.where(valid[..., None], dt, 0.0)
 
-    conv_state = cache["conv"] if decode else None
-    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    conv_state = cache["conv"] if (decode or resume) else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state,
+                                 q_lens=q_lens)
     xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
     xs = xs.reshape(bsz, s, h, p_dim)
     b = b.reshape(bsz, s, g, n)
@@ -170,7 +195,8 @@ def ssm_apply(p: dict, x: jax.Array, cfg, *, cache=None, pos=None):
         # SSD compute shards over heads (48 % 16 == 0 on production meshes)
         xs = constrain(xs, "batch", None, "model", None)
         dt = constrain(dt, "batch", None, "model")
-        y, final = ssd_chunked(xs, dt, p["A_log"], b, c, cfg.ssm_chunk)
+        y, final = ssd_chunked(xs, dt, p["A_log"], b, c, cfg.ssm_chunk,
+                               init=cache["state"] if resume else None)
         y = y[:, :s] + xs[:, :s] * p["D"][None, None, :, None]
         new_cache = None
         if cache is not None:

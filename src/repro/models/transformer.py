@@ -82,7 +82,7 @@ def block_init(kind: str, cfg, key, dtype) -> dict:
 
 def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
                 cache=None, pos=None, prefix_len: int = 0, enc_out=None,
-                paged=None, q_lens=None, scales=None):
+                paged=None, q_lens=None, scales=None, kv_quant=False):
     """-> (x, new_cache, aux_loss); with ``scales`` ->
     (x, new_cache, new_scales, aux_loss).
 
@@ -102,15 +102,18 @@ def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
 
     if kind == "ssm":
         y, new_cache = ssm_mod.ssm_apply(p["mixer"], h, cfg,
-                                         cache=cache, pos=pos)
+                                         cache=cache, pos=pos,
+                                         q_lens=q_lens)
         return x + y, new_cache, aux
 
     if kind == "rglru":
         y, new_cache = rglru_mod.rglru_apply(p["mixer"], h, cfg,
-                                             cache=cache, pos=pos)
+                                             cache=cache, pos=pos,
+                                             q_lens=q_lens)
     elif kind in MLA_KINDS:
         res = attn.mla_apply(p["attn"], h, cfg, cache=cache, pos=pos,
-                             paged=paged, q_lens=q_lens, scales=scales)
+                             paged=paged, q_lens=q_lens, scales=scales,
+                             kv_quant=kv_quant)
         if scales is not None:
             y, new_cache, new_scales = res
         else:
@@ -121,7 +124,7 @@ def block_apply(kind: str, cfg, p: dict, x: jax.Array, *,
         res = attn.attn_apply(
             p["attn"], h, cfg, kind=_attn_kind(kind), cache=self_cache,
             pos=pos, prefix_len=prefix_len, paged=paged, q_lens=q_lens,
-            scales=scales)
+            scales=scales, kv_quant=kv_quant)
         if scales is not None:
             y, new_cache, new_scales = res
         else:
@@ -303,7 +306,8 @@ def loss_fn(cfg, params, batch) -> jax.Array:
 
 
 def _run_stack(cfg, params, cache, x, *, pos=None, prefix_len: int = 0,
-               flags=None, ctx=None, q_lens=None, scales=None):
+               flags=None, ctx=None, q_lens=None, scales=None,
+               kv_quant=False):
     """One pass through prefix + scan + suffix blocks, threading the cache.
 
     The single block walker behind :func:`prefill`,
@@ -343,11 +347,12 @@ def _run_stack(cfg, params, cache, x, *, pos=None, prefix_len: int = 0,
         if sc is None:
             x, nc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos,
                                    prefix_len=prefix_len, paged=pg,
-                                   q_lens=q_lens)
+                                   q_lens=q_lens, kv_quant=kv_quant)
             return x, nc, None
         x, nc, nsc, _ = block_apply(kind, cfg, p, x, cache=c, pos=pos,
                                     prefix_len=prefix_len, paged=pg,
-                                    q_lens=q_lens, scales=sc)
+                                    q_lens=q_lens, scales=sc,
+                                    kv_quant=kv_quant)
         return x, nc, nsc
 
     new_cache = {"prefix": [], "suffix": []}
@@ -425,7 +430,7 @@ def _embed_step(cfg, params, tokens):
     return constrain(x, "batch", None, None)
 
 
-def prefill_chunk(cfg, params, cache, tokens, pos):
+def prefill_chunk(cfg, params, cache, tokens, pos, *, kv_quant=False):
     """One prefill chunk: ``tokens`` (B, S) at absolute positions
     pos..pos+S-1 against a partially filled cache -> (last-position logits
     (B, 1, V), new cache).
@@ -438,24 +443,50 @@ def prefill_chunk(cfg, params, cache, tokens, pos):
     (token-equivalence locked down in tests/test_paged_prefill.py).
     This is the *gathered oracle's* chunk step (standalone batch-1 cache);
     the ``pallas_paged`` backend runs chunks through :func:`mixed_step`
-    instead.  Recurrent blocks (ssm / rglru) cannot resume a prompt
-    mid-scan and raise; ``models.api.supports_chunked_prefill`` gates
-    them off.
+    instead.  Recurrent blocks (ssm / rglru) resume their scan from the
+    cached recurrent state.  ``kv_quant`` (``kv_codec="cluster"`` on the
+    gathered backend) round-trips the chunk's K/V through the codec so
+    later chunks attend to the same quantised keys the kernel backend
+    sees, and install's page re-encode is lossless.
     """
     x = _embed_step(cfg, params, tokens)
-    x, new_cache, _ = _run_stack(cfg, params, cache, x, pos=pos)
+    x, new_cache, _ = _run_stack(cfg, params, cache, x, pos=pos,
+                                 kv_quant=kv_quant)
     x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
     return _unembed(cfg, params, x), new_cache
 
 
-def decode_step(cfg, params, cache, tokens, pos):
+def verify_step(cfg, params, cache, tokens, pos, q_lens, *, kv_quant=False):
+    """Speculative verification: score ``tokens`` (B, S) at absolute
+    positions pos..pos+S-1 against a partially filled cache -> (*full*
+    logits (B, S, V), new cache).
+
+    Identical to :func:`prefill_chunk` except every position's logits are
+    returned (the scheduler needs row ``i`` to check draft token ``i+1``)
+    and ``q_lens`` makes the block ragged: lane ``b`` contributes
+    ``q_lens[b]`` real tokens, rows past that are padding whose cache
+    writes are dropped and whose logits are garbage.  A ``q_lens[b] == 0``
+    lane is an exact no-op on its cache.
+    """
+    x = _embed_step(cfg, params, tokens)
+    x, new_cache, _ = _run_stack(cfg, params, cache, x, pos=pos,
+                                 q_lens=q_lens, kv_quant=kv_quant)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _unembed(cfg, params, x), new_cache
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, kv_quant=False):
     """One token with a filled cache -> (logits (B,1,V), new cache).
 
     ``pos`` is the absolute position of ``tokens`` (vision prefix included
-    for VLM archs).
+    for VLM archs).  ``kv_quant`` round-trips the new row's K/V through
+    the cluster codec before write *and* attention (gathered backend
+    under ``kv_codec="cluster"``) — quantise-then-attend, the same
+    numerics the paged kernel's in-VMEM decode applies.
     """
     x = _embed_step(cfg, params, tokens)
-    x, new_cache, _ = _run_stack(cfg, params, cache, x, pos=pos)
+    x, new_cache, _ = _run_stack(cfg, params, cache, x, pos=pos,
+                                 kv_quant=kv_quant)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     return _unembed(cfg, params, x), new_cache
 

@@ -1,0 +1,200 @@
+"""Draft-token proposers for speculative decoding.
+
+The scheduler asks a :class:`Drafter` for up to ``k`` guesses of each
+slot's next tokens, stacks them after the slot's real next token as a
+ragged ``q_lens[s] = 1 + k_s`` block, and lets the model score the whole
+block in one step (``runtime.scheduler``).  Greedy verification accepts
+the longest prefix of drafts that matches the model's own argmax chain,
+so *any* proposal strategy — however wrong — leaves the output
+token-identical to non-speculative decoding; drafters only trade
+proposal cost against acceptance rate.
+
+Two implementations:
+
+* :class:`NGramDrafter` — no model at all: look the slot's recent
+  suffix up in its own prompt + generation history and propose whatever
+  followed it last time.  Free, and strong on the repetitive tails
+  (code, templated text, looping structures) where speculation pays
+  most.
+* :class:`DraftModelDrafter` — a tiny stand-in transformer sharing the
+  scheduler's :class:`~repro.runtime.weight_store.WeightStore` (its
+  binarised MLP tiles live in the same decode-tile cache as the target
+  model's, so the draft model rides the existing compression machinery
+  instead of doubling resident weights).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+
+_EMPTY = np.zeros((0,), np.int64)
+
+
+class Drafter:
+    """Interface: batched draft proposals.
+
+    ``propose(histories, k, limits=None)`` takes one token history per
+    decoding slot (prompt + everything generated so far, 1-D int arrays)
+    and returns one int64 array of 0..k draft tokens per slot.  With
+    ``limits``, proposal ``i`` is additionally capped at ``limits[i]``
+    tokens (the scheduler passes each slot's remaining budget so a
+    drafter can never push a slot past its ``max_new_tokens``).
+    Proposals must be deterministic functions of the history — the
+    token-identity oracle re-runs traces and expects identical blocks.
+    """
+
+    name = "drafter"
+
+    def propose(self, histories, k: int, limits=None):
+        raise NotImplementedError
+
+
+def _clamp(draft: np.ndarray, k: int, limit) -> np.ndarray:
+    n = min(len(draft), k if limit is None else min(k, max(0, int(limit))))
+    return np.asarray(draft[:n], np.int64)
+
+
+class NGramDrafter(Drafter):
+    """Suffix-match drafting from the slot's own history.
+
+    For each history, try n-gram orders ``max_order`` down to 1: find
+    the most recent *earlier* occurrence of the history's final n-gram
+    and propose the tokens that followed it.  Higher orders are tried
+    first (more context, better acceptance); the first order with a
+    match wins.  An empty history, or one whose suffix never occurred
+    before, proposes nothing — speculation simply skips that slot for
+    a step.
+    """
+
+    name = "ngram"
+
+    def __init__(self, max_order: int = 3):
+        assert max_order >= 1, max_order
+        self.max_order = max_order
+
+    def _propose_one(self, hist: np.ndarray, k: int) -> np.ndarray:
+        n = len(hist)
+        if n == 0 or k <= 0:
+            return _EMPTY
+        for order in range(min(self.max_order, n), 0, -1):
+            suffix = hist[n - order:]
+            # scan match starts right to left (most recent occurrence
+            # first, excluding the suffix's own position) and take the
+            # first match with a full k-token continuation; inside a
+            # repeated run the most recent matches sit flush against the
+            # history's end with only a truncated follow, so the longest
+            # follow seen is kept as the fallback
+            best = _EMPTY
+            for start in range(n - order - 1, -1, -1):
+                follow = hist[start + order:start + order + k]
+                if np.array_equal(hist[start:start + order], suffix):
+                    if len(follow) == k:
+                        return np.asarray(follow, np.int64)
+                    if len(follow) > len(best):
+                        best = follow
+            if len(best):
+                return np.asarray(best, np.int64)
+        return _EMPTY
+
+    def propose(self, histories, k: int, limits=None):
+        out = []
+        for i, hist in enumerate(histories):
+            h = np.asarray(hist, np.int64).reshape(-1)
+            lim = None if limits is None else limits[i]
+            out.append(_clamp(self._propose_one(h, k), k, lim))
+        return out
+
+
+# the tiny stand-in draft arch: minitron's block layout at toy width.
+# ~100k params — one draft forward costs a fraction of a target
+# mixed-step, which is the whole economic argument for draft models.
+_DRAFT_SCALED = dict(num_layers=2, scan_repeats=2, d_model=64,
+                     num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128)
+
+
+def draft_config(vocab_size: int, base: str = "minitron-8b"):
+    """The draft model's config: ``base``'s architecture at toy scale,
+    vocab-matched to the target (draft tokens index the target's
+    logits rows, so the vocabularies must agree)."""
+    return get_config(base).scaled(dtype="float32",
+                                   vocab_size=vocab_size, **_DRAFT_SCALED)
+
+
+class DraftModelDrafter(Drafter):
+    """Greedy drafting with a tiny transformer on the shared weight store.
+
+    The draft model's compressible weights are registered into the
+    scheduler's :class:`WeightStore` under ``model_id="draft"`` and
+    materialised through the same decode-tile cache as the target's
+    (weights that cannot compress are kept raw).  Proposal is ``k``
+    greedy forwards over a fixed ``window``-token suffix of the history
+    — stateless full forwards at one compile shape, no KV cache to keep
+    coherent with the scheduler's rollbacks.
+    """
+
+    name = "draft"
+
+    def __init__(self, engine, *, base: str = "minitron-8b",
+                 window: int = 32, seed: int = 0):
+        from repro.models.api import get_model
+        self.window = int(window)
+        cfg = draft_config(engine.cfg.vocab_size, base)
+        api = get_model(cfg)
+        params = api.init_params(cfg, jax.random.PRNGKey(seed))
+        self.store = engine.store
+        self._raw = None
+        try:
+            self.store.register_model("draft", params)
+            cfg = cfg.scaled(binarize_mlp=True)
+        except ValueError:
+            self._raw = params  # nothing compressible: serve raw
+        self.cfg = cfg
+        self._forward = jax.jit(
+            lambda p, t: api.forward(cfg, p, t)[0])
+
+    def _params(self):
+        return self._raw if self._raw is not None \
+            else self.store.materialize("draft")
+
+    def propose(self, histories, k: int, limits=None):
+        params = self._params()
+        out = []
+        for i, hist in enumerate(histories):
+            h = list(np.asarray(hist, np.int64).reshape(-1))
+            lim = None if limits is None else limits[i]
+            kk = k if lim is None else min(k, max(0, int(lim)))
+            if not h or kk <= 0:
+                out.append(_EMPTY)
+                continue
+            draft = []
+            for _ in range(kk):
+                tail = h[-self.window:]
+                toks = np.zeros((1, self.window), np.int32)
+                toks[0, :len(tail)] = tail
+                logits = self._forward(params, jnp.asarray(toks))
+                nxt = int(jnp.argmax(logits[0, len(tail) - 1]))
+                draft.append(nxt)
+                h.append(nxt)
+            out.append(np.asarray(draft, np.int64))
+        return out
+
+
+def make_drafter(spec: str, engine=None) -> Drafter | None:
+    """Resolve a ``--speculate`` spec: ``"off"`` -> None, ``"ngram"`` ->
+    :class:`NGramDrafter`, ``"draft"`` / ``"draft:<base-arch>"`` ->
+    :class:`DraftModelDrafter` on ``engine``'s weight store."""
+    if spec in (None, "off", ""):
+        return None
+    if spec == "ngram":
+        return NGramDrafter()
+    if spec == "draft" or spec.startswith("draft:"):
+        if engine is None:
+            raise ValueError("draft-model speculation needs an engine")
+        base = spec.split(":", 1)[1] if ":" in spec else "minitron-8b"
+        return DraftModelDrafter(engine, base=base)
+    raise ValueError(f"unknown speculate spec {spec!r}; expected "
+                     "'off', 'ngram', 'draft' or 'draft:<arch>'")

@@ -127,6 +127,13 @@ class ServeMetrics:
     #                                    reservation pressure
     shared_pages: int = 0              # pages referenced >1x (last-step
     shared_page_steps: int = 0         # gauge; sum over steps for mean)
+    spec_rounds: int = 0               # (speculative round x slot) pairs
+    #                                    that carried >=1 draft token
+    spec_draft_tokens: int = 0         # draft tokens proposed to verify
+    spec_accepted_tokens: int = 0      # drafts the model's argmax agreed
+    #                                    with (emitted beyond the 1/step
+    #                                    baseline — the speculation win)
+    spec_rejected_tokens: int = 0      # drafts rolled back
     _t0: float = dataclasses.field(default_factory=time.monotonic)
     # latency distributions (log-bucket histograms; seconds).  Lifetime
     # averages hide tails — the paper's wins are distribution claims, so
@@ -248,6 +255,23 @@ class ServeMetrics:
         self.decode_s += dt
         self.step_hist.record(dt)
 
+    def record_spec(self, proposed: int, accepted: int) -> None:
+        """One slot's speculative verification: ``proposed`` draft tokens
+        scored, ``accepted`` of them matching the model's own argmax
+        chain (the rest were rolled back).  No-op when nothing was
+        proposed — a slot the drafter skipped is a plain decode step."""
+        if proposed <= 0:
+            return
+        self.spec_rounds += 1
+        self.spec_draft_tokens += proposed
+        self.spec_accepted_tokens += accepted
+        self.spec_rejected_tokens += proposed - accepted
+
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the verifier accepted."""
+        return self.spec_accepted_tokens / self.spec_draft_tokens \
+            if self.spec_draft_tokens else 0.0
+
     def record_completed(self, n_requests: int) -> None:
         self.requests_completed += n_requests
 
@@ -367,6 +391,11 @@ class ServeMetrics:
                 f"({self.prefix_tokens_reused} toks reused, "
                 f"{self.prefill_chunks_avoided} chunks avoided, "
                 f"{self.prefix_cow_copies} cow)")
+        if self.spec_rounds:
+            parts.append(
+                f"spec {self.spec_accepted_tokens}/"
+                f"{self.spec_draft_tokens} drafts accepted "
+                f"({self.spec_acceptance_rate() * 100:.0f}%)")
         if self.ttft_hist.n:
             p50, p99 = self.ttft_hist.percentiles(50, 99)
             parts.append(f"ttft p50 {p50 * 1000:.0f}ms p99 {p99 * 1000:.0f}ms")
@@ -427,7 +456,15 @@ class ServeMetrics:
                 ("prefix_evictions",
                  "prefix-index entries evicted under pressure"),
                 ("shared_page_steps",
-                 "decode steps x shared pages (occupancy sum)")):
+                 "decode steps x shared pages (occupancy sum)"),
+                ("spec_rounds",
+                 "speculative verifications (round x slot pairs)"),
+                ("spec_draft_tokens",
+                 "draft tokens proposed for verification"),
+                ("spec_accepted_tokens",
+                 "draft tokens the verifier accepted"),
+                ("spec_rejected_tokens",
+                 "draft tokens rolled back after rejection")):
             reg.counter(f"{field}_total",
                         (lambda f=field: getattr(self, f)), help_)
         reg.counter("prefill_seconds_total", lambda: self.prefill_s,
@@ -448,6 +485,9 @@ class ServeMetrics:
         reg.gauge("kv_capacity_multiplier",
                   lambda: self.kv_capacity_multiplier(),
                   "effective KV capacity multiplier (fp/resident bytes)")
+        reg.gauge("spec_acceptance_rate",
+                  lambda: self.spec_acceptance_rate(),
+                  "fraction of proposed draft tokens accepted")
         for name, hist, help_ in (
                 ("ttft_seconds", self.ttft_hist, "time to first token"),
                 ("tpot_seconds", self.tpot_hist, "time per output token"),

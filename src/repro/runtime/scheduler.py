@@ -85,7 +85,7 @@ from repro.kernels.paged_attention import effective_q_block
 from repro.models.api import (ATTN_BACKENDS, cache_layout, get_model,
                               padded_page_dims, supports_chunked_prefill,
                               supports_paged_attention,
-                              supports_prefix_share)
+                              supports_prefix_share, supports_speculation)
 from repro.runtime import weight_store as ws_mod
 from repro.runtime.decode_cache import DecodeTileCache, EvictionPolicy
 from repro.runtime.metrics import ServeMetrics
@@ -299,22 +299,43 @@ class ServeEngine:
         # cache lane (leaves (S, 1, ...)); one compile per (S, slot_len).
         # The pooled cache is donated — the KV update happens in place
         # instead of copying every lane's cache each step.
-        self._slot_decode_jit = jax.jit(
-            jax.vmap(
-                lambda p, c, t, q: self.api.decode_step(self.cfg, p, c,
-                                                        t, q),
-                in_axes=(None, 0, 0, 0)),
-            donate_argnums=(1,))
+        def _mk_slot_decode(kvq: bool):
+            if kvq:
+                step = lambda p, c, t, q: self.api.decode_step(
+                    self.cfg, p, c, t, q, kv_quant=True)
+            else:   # families without kv_quant (encdec) share this path
+                step = lambda p, c, t, q: self.api.decode_step(
+                    self.cfg, p, c, t, q)
+            return jax.jit(jax.vmap(step, in_axes=(None, 0, 0, 0)),
+                           donate_argnums=(1,))
+
+        # keyed by kv_quant: under kv_codec="cluster" the gathered decode
+        # quantises the new row before write *and* attention, matching
+        # the paged kernel's in-VMEM decode numerics
+        self._slot_decode_jits = {kvq: _mk_slot_decode(kvq)
+                                  for kvq in (False, True)}
+        self._slot_decode_jit = self._slot_decode_jits[False]
         self._decode_jit = jax.jit(
             lambda p, c, t, q: self.api.decode_step(self.cfg, p, c, t, q))
         # chunked prefill: batch-1, one compile per distinct chunk length
-        # (fixed-size chunks + one remainder size keep that bounded)
+        # (fixed-size chunks + one remainder size keep that bounded);
+        # keyed by kv_quant (the codec round-trip is baked into the trace)
         self._chunk_jit = None
+        self._chunk_jits: dict = {}
         if self.api.prefill_chunk is not None:
-            self._chunk_jit = jax.jit(
-                lambda p, c, t, q: self.api.prefill_chunk(self.cfg, p, c,
-                                                          t, q),
-                donate_argnums=(1,))
+            for kvq in (False, True):
+                self._chunk_jits[kvq] = jax.jit(
+                    functools.partial(
+                        lambda kvq, p, c, t, q: self.api.prefill_chunk(
+                            self.cfg, p, c, t, q, kv_quant=kvq), kvq),
+                    donate_argnums=(1,))
+            self._chunk_jit = self._chunk_jits[False]
+        # speculative verification: vmapped over slot lanes (leaves
+        # (S, 1, ...), toks (S, 1, Q), poss/q_lens (S,)), keyed by
+        # (commit, kv_quant) — the non-committing scoring pass keeps the
+        # input cache alive for the rollback-free commit pass, which
+        # donates it
+        self._verify_jits: dict = {}
         # pallas_paged backend: one compiled mixed step per (cache layout,
         # padded block width) — decode-only ticks compile at Q=1, chunked
         # ticks at Q=prefill_chunk (the pools are donated; the Pallas
@@ -433,17 +454,50 @@ class ServeEngine:
         return self.api.init_cache(self.cfg, 1, slot_len)
 
     def prefill_chunk_step(self, params, cache, chunk: np.ndarray,
-                           pos: int):
+                           pos: int, *, kv_quant: bool = False):
         """One prompt chunk at absolute positions pos..pos+len-1 ->
         (last-position logits, updated cache).  The cache argument is
-        donated."""
+        donated.  ``kv_quant`` round-trips the chunk's K/V through the
+        cluster codec (gathered backend under ``kv_codec="cluster"``)."""
         toks = jnp.asarray(np.asarray(chunk, np.int32)[None])
-        return self._chunk_jit(params, cache, toks, jnp.int32(pos))
+        return self._chunk_jits[bool(kv_quant)](params, cache, toks,
+                                                jnp.int32(pos))
 
-    def slot_decode(self, params, pooled_cache, toks, poss):
+    def verify_slots(self, params, pooled_cache, toks, poss, q_lens, *,
+                     commit: bool, kv_quant: bool = False):
+        """Speculative verification over slot lanes: toks (S, 1, Q) int32,
+        poss (S,) int32 start positions, q_lens (S,) int32 real token
+        counts (0 = idle lane, an exact cache no-op) -> (full logits
+        (S, 1, Q, V), new pooled cache).
+
+        ``commit=False`` scores drafts without donating the cache (the
+        new cache is discarded, the input stays alive); ``commit=True``
+        re-runs with the accepted lengths and donates, writing exactly
+        the accepted tokens' KV in place — speculative rollback by
+        construction, with no pool rewind."""
+        key = (bool(commit), bool(kv_quant))
+        fn = self._verify_jits.get(key)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(
+                    lambda kvq, p, c, t, pos, ql: jax.vmap(
+                        lambda c1, t1, pos1, ql1: self.api.verify_step(
+                            self.cfg, p, c1, t1, pos1, ql1, kv_quant=kvq),
+                        in_axes=(0, 0, 0, 0))(c, t, pos, ql),
+                    bool(kv_quant)),
+                donate_argnums=(1,) if commit else ())
+            self._verify_jits[key] = fn
+        # q_lens rides as (S, 1) so each vmapped lane sees a (1,) array
+        # (the ragged masks index it per-lane)
+        return fn(params, pooled_cache, toks, poss,
+                  jnp.asarray(q_lens, jnp.int32).reshape(-1, 1))
+
+    def slot_decode(self, params, pooled_cache, toks, poss, *,
+                    kv_quant: bool = False):
         """One decode step for every slot: toks (S, 1, 1) int32, poss (S,)
         int32 -> (logits (S, 1, 1, V), new pooled cache)."""
-        return self._slot_decode_jit(params, pooled_cache, toks, poss)
+        return self._slot_decode_jits[bool(kv_quant)](
+            params, pooled_cache, toks, poss)
 
     def decode_step(self, params, cache, tok, pos: int):
         """Single shared-position decode (legacy path; slot serving goes
@@ -677,8 +731,18 @@ class SlotPool:
                 (page_size,), 0, page_size, hw_tiles)[0] \
                 if self.paged else page_size
             kleaves, sleaves = [], []
-            for sa, ax, bax in zip(leaves_a, self._paged_axis,
-                                   self._batch_axis):
+            # lane leaves under this backend are rolling-window KV: the
+            # slot axis sits where batch sat (bax) and the W rolling rows
+            # right behind it.  Speculative verification snapshots the
+            # draft-covered rows before a mixed step and restores the
+            # rejected ones after — a stale rejected row at position p
+            # would otherwise be reinterpreted as position p - W inside
+            # a future window.  ``lane_min_rows`` bounds the draft depth
+            # (distinct modular rows per leaf).
+            self._lane_info: list[tuple[int, int, int]] = []
+            for li, (sa, ax, bax) in enumerate(zip(leaves_a,
+                                                   self._paged_axis,
+                                                   self._batch_axis)):
                 if ax is not None:
                     assert bax == ax - 1 and sa.shape[bax] == 1, \
                         (sa.shape, ax, bax)
@@ -695,6 +759,9 @@ class SlotPool:
                         (*sa.shape[:bax], n_slots, *sa.shape[bax + 1:]),
                         sa.dtype))
                     sleaves.append(None)
+                    self._lane_info.append((li, bax, sa.shape[bax + 1]))
+            self.lane_min_rows = min(
+                (w for _, _, w in self._lane_info), default=None)
             self.kcache = jax.tree_util.tree_unflatten(self._treedef,
                                                        kleaves)
             # scale-pool tree: same treedef position-for-position, f32
@@ -896,6 +963,96 @@ class SlotPool:
 
         self._kernel_install = jax.jit(install, donate_argnums=(0, 1))
         self._kernel_copy = jax.jit(kernel_copy, donate_argnums=(0, 1))
+
+        lane_info, n_slots = self._lane_info, self.n_slots
+
+        def lane_snapshot(kcache, poss, k):
+            # rows (pos+1+i) % W per lane leaf: the rolling rows draft
+            # tokens 0..k-1 will overwrite this step
+            leaves = jax.tree_util.tree_flatten(kcache)[0]
+            snaps = []
+            for li, bax, w in lane_info:
+                l2 = jnp.moveaxis(leaves[li], (bax, bax + 1), (0, 1))
+                rows = (poss[:, None] + 1 + jnp.arange(k)) % w
+                snaps.append(l2[jnp.arange(n_slots)[:, None], rows])
+            return snaps
+
+        def lane_restore(kcache, snaps, poss, keep):
+            # keep (S, k) bool: restore the snapshotted row (a rejected
+            # draft's write must be undone); False leaves the new write
+            leaves, treedef = jax.tree_util.tree_flatten(kcache)
+            for (li, bax, w), snap in zip(lane_info, snaps):
+                l2 = jnp.moveaxis(leaves[li], (bax, bax + 1), (0, 1))
+                rows = (poss[:, None] + 1 + jnp.arange(keep.shape[1])) % w
+                idx = (jnp.arange(n_slots)[:, None], rows)
+                m = keep.reshape(*keep.shape,
+                                 *(1,) * (snap.ndim - keep.ndim))
+                l2 = l2.at[idx].set(jnp.where(m, snap, l2[idx]))
+                leaves[li] = jnp.moveaxis(l2, (0, 1), (bax, bax + 1))
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+
+        self._lane_snapshot = jax.jit(lane_snapshot, static_argnums=(2,))
+        self._lane_restore = jax.jit(lane_restore, donate_argnums=(0,))
+
+    # -- speculative decoding -----------------------------------------------
+    def spec_snapshot(self, poss, k: int):
+        """Snapshot the rolling-lane rows draft tokens will overwrite
+        (``pallas_paged`` only; no-op without lane leaves)."""
+        if not self._lane_info:
+            return None
+        return self._lane_snapshot(self.kcache, jnp.asarray(poss), k)
+
+    def spec_restore(self, snaps, poss, keep) -> None:
+        """Undo rejected drafts' rolling-lane writes: ``keep`` (S, k)
+        marks rows to roll back.  Paged leaves self-heal (every position
+        is rewritten by the round that covers it before it is attended),
+        so only the modular lane rows need this."""
+        if snaps is None or not np.asarray(keep).any():
+            return
+        self.kcache = self._lane_restore(self.kcache, snaps,
+                                         jnp.asarray(poss),
+                                         jnp.asarray(keep))
+
+    def spec_score(self, params, toks, poss, q_lens):
+        """Speculative phase 1 (gathered / monolithic backends): score
+        the ragged draft blocks without touching the resident cache ->
+        (logits (S, 1, Q, V), opaque commit context).  The scoring pass
+        is not donated — its cache output is discarded, which is what
+        makes rejection free."""
+        assert self.backend != "pallas_paged"
+        if self.paged:
+            tel = self.engine.telemetry
+            table = jnp.asarray(self.table)
+            with tel.timed("kv_decode" if self.codec else "kv_gather"):
+                views = self._gather(self.pages, self.page_scales,
+                                     self.unpaged, table)
+            logits, _ = self.engine.verify_slots(
+                params, views, toks, poss, q_lens, commit=False,
+                kv_quant=self.codec)
+            return logits, (views, table)
+        logits, _ = self.engine.verify_slots(
+            params, self.cache, toks, poss, q_lens, commit=False)
+        return logits, None
+
+    def spec_commit(self, params, toks, poss, commit_lens, ctx) -> None:
+        """Speculative phase 2: re-run the block at the *accepted*
+        lengths with the cache donated — exactly the accepted tokens'
+        KV (and recurrent state advance) lands in place, so rollback
+        never has to rewind anything."""
+        assert self.backend != "pallas_paged"
+        if self.paged:
+            views, table = ctx
+            tel = self.engine.telemetry
+            _, new_tree = self.engine.verify_slots(
+                params, views, toks, poss, commit_lens, commit=True,
+                kv_quant=self.codec)
+            with tel.timed("kv_encode" if self.codec else "kv_scatter"):
+                self.pages, self.page_scales, self.unpaged = \
+                    self._scatter_pages(self.pages, self.page_scales,
+                                        new_tree, table)
+        else:
+            _, self.cache = self.engine.verify_slots(
+                params, self.cache, toks, poss, commit_lens, commit=True)
 
     # -- page bookkeeping ---------------------------------------------------
     def pages_needed(self, cache_len: int) -> int:
@@ -1263,7 +1420,8 @@ class SlotPool:
                 views = self._gather(self.pages, self.page_scales,
                                      self.unpaged, table)
             logits, new_tree = self.engine.slot_decode(
-                params, views, jnp.asarray(toks), jnp.asarray(poss))
+                params, views, jnp.asarray(toks), jnp.asarray(poss),
+                kv_quant=bool(self.codec))
             with tel.timed("kv_encode" if self.codec else "kv_scatter"):
                 self.pages, self.page_scales, self.unpaged = \
                     self._scatter_pages(self.pages, self.page_scales,
@@ -1333,9 +1491,12 @@ class Scheduler:
                  kv_codec: str = "none",
                  prefix_share: bool = False,
                  kernel_tune: str | None = None,
+                 speculate: str = "off", draft_k: int = 4,
                  log_every: int = 0, emit: Callable[[str], None] = print):
         if mode not in ("continuous", "wave"):
             raise ValueError(f"unknown scheduling mode {mode!r}")
+        if draft_k < 1:
+            raise ValueError(f"draft_k must be >= 1: {draft_k}")
         if prefill_chunk is not None and prefill_chunk <= 0:
             raise ValueError(f"prefill_chunk must be positive: "
                              f"{prefill_chunk}")
@@ -1384,6 +1545,9 @@ class Scheduler:
         self.kv_codec = kv_codec
         self.prefix_share = prefix_share
         self.kernel_tune = kernel_tune
+        self.speculate = speculate or "off"
+        self.draft_k = int(draft_k)
+        self.drafter = None
         self.log_every = log_every
         self.emit = emit
         self._queue: list[Request] = []
@@ -1395,11 +1559,24 @@ class Scheduler:
             _warn_fallback(
                 engine.cfg.family, "chunked_prefill",
                 f"{engine.cfg.family} arch downgraded to monolithic "
-                f"prefill: supports_chunked_prefill=False (recurrent "
-                f"state or multimodal prefix cannot resume a prompt "
-                f"mid-cache)")
+                f"prefill: supports_chunked_prefill=False (a multimodal "
+                f"prefix cannot resume a prompt mid-cache)")
             emit(f"note: {engine.cfg.family} arch cannot resume a prompt "
                  "mid-cache; falling back to monolithic prefill")
+        if self.speculate != "off" and (
+                not supports_speculation(engine.cfg) or
+                engine.api.verify_step is None):
+            self.speculate = "off"
+            _warn_fallback(
+                engine.cfg.family, "speculation",
+                f"{engine.cfg.family} arch downgraded to plain decoding: "
+                f"supports_speculation=False (draft verification rides "
+                f"the resume-from-cache machinery this arch lacks)")
+            emit(f"note: {engine.cfg.family} arch cannot verify draft "
+                 "tokens mid-cache; speculative decoding off")
+        if self.speculate != "off":
+            from repro.runtime.drafter import make_drafter
+            self.drafter = make_drafter(self.speculate, engine)
         if attn_backend == "pallas_paged" and \
                 not engine.supports_paged_attention:
             self.attn_backend = "gathered"
@@ -1527,8 +1704,18 @@ class Scheduler:
                     with tel.timed("prefill"):
                         self._prefill_tick(pool, completed)
                 if pool.active():
-                    with tel.timed("decode"):
-                        self._step(pool, completed)
+                    if self.drafter is not None:
+                        if pool.backend == "pallas_paged":
+                            # single-phase in-kernel speculation: the
+                            # mixed tick verifies drafts even with no
+                            # chunks in flight
+                            with tel.timed("mixed_step"):
+                                self._mixed_tick(pool, completed)
+                        else:
+                            self._spec_step(pool, completed)
+                    else:
+                        with tel.timed("decode"):
+                            self._step(pool, completed)
         if pool.codec:
             self.engine.metrics.record_kv_codec_error(
                 pool.codec_error_bound())
@@ -1715,8 +1902,13 @@ class Scheduler:
                                    slot.prefill_cursor + c]
                 t0 = time.monotonic()
                 params = self.engine.step_params()
+                # under a KV codec the chunk's K/V is codec-roundtripped
+                # in the standalone cache so install's re-encode lands on
+                # the codec's own fixed point — bit-identical to the
+                # monolithic prefill's single encode
                 logits, slot.pcache = self.engine.prefill_chunk_step(
-                    params, slot.pcache, chunk, slot.prefill_cursor)
+                    params, slot.pcache, chunk, slot.prefill_cursor,
+                    kv_quant=bool(pool.codec))
                 dt = time.monotonic() - t0
                 m.record_prefill_chunk(c, dt, stalled=bool(pool.active()))
                 tr = self.engine.telemetry.tracer
@@ -1772,19 +1964,38 @@ class Scheduler:
             spent += c
         if not active and not chunks:
             return
+        drafts: dict[int, np.ndarray] = {}
+        if self.drafter is not None and active:
+            # rolling-window lanes are snapshot/restored around the
+            # trace; the snapshot depth caps how deep a draft may write
+            cap = None if pool.lane_min_rows is None \
+                else pool.lane_min_rows - 1
+            with self.engine.telemetry.timed("spec_draft"):
+                drafts = self._propose_drafts(pool, active, cap=cap)
         # pad every chunk-carrying tick to one block width so compiled
         # mixed-step shapes stay bounded: Q = prefill_chunk while chunks
-        # are in flight (remainders ride padded), Q = 1 for pure decode
+        # are in flight (remainders ride padded; drafts fold into the
+        # same padding), Q = 1 + draft_k on speculative decode ticks,
+        # Q = 1 for plain decode
         width = min(self.prefill_chunk, pool.slot_len) if chunks else 1
+        if chunks:
+            drafts = {i: d[:width - 1] for i, d in drafts.items()}
+        drafts = {i: d for i, d in drafts.items() if len(d)}
+        if drafts and not chunks:
+            width = 1 + self.draft_k
         toks = np.zeros((pool.n_slots, width), np.int32)
         poss = np.zeros(pool.n_slots, np.int32)
         q_lens = np.zeros(pool.n_slots, np.int32)
         for slot in active:
+            d = drafts.get(slot.index)
+            nd = 0 if d is None else len(d)
             toks[slot.index, 0] = slot.tok
+            if nd:
+                toks[slot.index, 1:1 + nd] = d
             poss[slot.index] = slot.pos
-            q_lens[slot.index] = 1
-            pool._prepare_write(slot, slot.pos, slot.pos)
-            pool._ensure_pages(slot, slot.pos)
+            q_lens[slot.index] = 1 + nd
+            pool._prepare_write(slot, slot.pos, slot.pos + nd)
+            pool._ensure_pages(slot, slot.pos + nd)
         for slot, c in chunks:
             cur = slot.prefill_cursor
             toks[slot.index, :c] = slot.req.prompt[cur:cur + c]
@@ -1796,26 +2007,54 @@ class Scheduler:
             pool._ensure_pages(slot, cur + c - 1)
         t0 = time.monotonic()
         params = self.engine.step_params()
+        snaps = kk = None
+        if drafts and pool.lane_min_rows is not None:
+            # rolling-window lanes have no rewind: snapshot the rows the
+            # drafts will overwrite so rejected writes can be undone
+            kk = max(len(d) for d in drafts.values())
+            snaps = pool.spec_snapshot(poss, kk)
         logits = pool.mixed_step(params, toks, poss, q_lens)
-        last = logits[jnp.arange(pool.n_slots),
-                      jnp.maximum(jnp.asarray(q_lens) - 1, 0)]   # (S, V)
-        nxt = np.asarray(jnp.argmax(last, axis=-1)).astype(np.int32)
-        finite = np.asarray(jnp.isfinite(last).all(axis=-1))
+        g = np.asarray(jnp.argmax(logits, axis=-1))              # (S, Q)
+        ok_rows = np.asarray(jnp.isfinite(logits).all(axis=-1))  # (S, Q)
+        lanes = np.arange(pool.n_slots)
+        nxt = g[lanes, np.maximum(q_lens - 1, 0)].astype(np.int32)
+        finite = ok_rows[lanes, np.maximum(q_lens - 1, 0)]
         dt = time.monotonic() - t0
         # wall time attributed to decode vs prefill by token share
         n_chunk_toks = sum(c for _, c in chunks)
-        total = len(active) + n_chunk_toks
-        dt_decode = dt * len(active) / total if total else 0.0
+        n_dec_toks = int(sum(q_lens[s.index] for s in active))
+        total = n_dec_toks + n_chunk_toks
+        dt_decode = dt * n_dec_toks / total if total else 0.0
+        emitted = 0
+        acc: dict[int, int] = {}
         for slot in active:
-            if not finite[slot.index]:
+            d = drafts.get(slot.index)
+            nd = 0 if d is None else len(d)
+            a = 0
+            while a < nd and int(d[a]) == int(g[slot.index, a]):
+                a += 1
+            acc[slot.index] = a
+            if not ok_rows[slot.index, :a + 1].all():
                 raise RuntimeError(
                     f"non-finite logits in mixed step for request "
                     f"{slot.req.rid} (compressed reconstruction or model "
                     f"numerics are broken)")
-            slot.pos += 1
-            slot.tok = int(nxt[slot.index])
-            slot.req.generated.append(slot.tok)
+            for t in g[slot.index, :a + 1]:
+                slot.req.generated.append(int(t))
+            emitted += a + 1
+            slot.pos += a + 1
+            slot.tok = int(g[slot.index, a])
+            if nd:
+                m.record_spec(nd, a)
             self._maybe_finish(pool, slot, completed)
+        if snaps is not None:
+            with self.engine.telemetry.timed("spec_rollback"):
+                keep = np.zeros((pool.n_slots, kk), bool)
+                for slot in active:
+                    d = drafts.get(slot.index)
+                    if d is not None:
+                        keep[slot.index, acc[slot.index]:len(d)] = True
+                pool.spec_restore(snaps, poss, keep)
         tr = self.engine.telemetry.tracer
         for slot, c in chunks:
             m.record_prefill_chunk(c, (dt - dt_decode) / len(chunks),
@@ -1849,7 +2088,7 @@ class Scheduler:
                 m.record_prefill_gather(0, pool.install_bytes)
                 self._maybe_finish(pool, slot, completed)
         if active:
-            m.record_decode_step(len(active), dt_decode,
+            m.record_decode_step(emitted, dt_decode,
                                  n_slots=pool.n_slots)
             m.record_pages(pool.pages_in_use(), pool.allocator.total)
             if pool.prefix is not None:
@@ -1861,6 +2100,111 @@ class Scheduler:
                                   pool.page_bytes_resident)
             if self.log_every and m.decode_steps % self.log_every == 0:
                 self.emit(self.engine.stats_line())
+
+    def _propose_drafts(self, pool: SlotPool, active: list[Slot],
+                        cap: int | None = None) -> dict[int, np.ndarray]:
+        """Ask the drafter for up to ``draft_k`` guesses per active slot
+        -> {slot.index: draft tokens}.  Per-slot limits keep every
+        accepted run inside the request's token budget (``remaining - 1``
+        — the verified bonus token always fits) and the slot's cache
+        (writes stop at ``slot_len - 1``); ``cap`` adds a backend bound
+        (rolling-lane snapshot depth on the mixed path)."""
+        hists = [np.concatenate([np.asarray(s.req.prompt, np.int64),
+                                 np.asarray(s.req.generated, np.int64)])
+                 for s in active]
+        limits = []
+        for s in active:
+            lim = s.req.max_new_tokens - len(s.req.generated) - 1
+            lim = min(lim, pool.slot_len - 1 - s.pos)
+            if cap is not None:
+                lim = min(lim, cap)
+            limits.append(max(lim, 0))
+        drafts = self.drafter.propose(hists, self.draft_k, limits=limits)
+        return {s.index: np.asarray(d, np.int64)
+                for s, d in zip(active, drafts)}
+
+    def _spec_step(self, pool: SlotPool, completed: list[Request]) -> None:
+        """One speculative round on the gathered / monolithic backends:
+        draft -> one ragged scoring pass over every slot lane (phase 1,
+        cache discarded) -> greedy accept on the host -> one committing
+        pass at the accepted lengths (phase 2, cache donated).  Rejected
+        drafts never touch the resident cache, so rollback is free by
+        construction; greedy acceptance emits exactly the argmax chain
+        plain decoding would, so the output is token-identical."""
+        m = self.engine.metrics
+        tel = self.engine.telemetry
+        active = pool.active()
+        t0 = time.monotonic()
+        with tel.timed("spec_draft"):
+            drafts = self._propose_drafts(pool, active)
+        if not any(len(d) for d in drafts.values()):
+            # nothing proposed anywhere: a plain decode step is cheaper
+            # than a two-phase verify round at Q = 1
+            with tel.timed("decode"):
+                self._step(pool, completed)
+            return
+        qn = 1 + self.draft_k
+        toks = np.zeros((pool.n_slots, 1, qn), np.int32)
+        poss = np.zeros(pool.n_slots, np.int32)
+        q_lens = np.zeros(pool.n_slots, np.int32)
+        for s in active:
+            d = drafts[s.index]
+            toks[s.index, 0, 0] = s.tok
+            if len(d):
+                toks[s.index, 0, 1:1 + len(d)] = d
+            poss[s.index] = s.pos
+            q_lens[s.index] = 1 + len(d)
+            if pool.paged:
+                # the real token and every draft write [pos, pos + d]:
+                # shared pages under the range go copy-on-write first
+                pool._prepare_write(s, s.pos, s.pos + len(d))
+                pool._ensure_pages(s, s.pos + len(d))
+        params = self.engine.step_params()
+        jtoks, jposs = jnp.asarray(toks), jnp.asarray(poss)
+        with tel.timed("spec_verify"):
+            logits, ctx = pool.spec_score(params, jtoks, jposs, q_lens)
+            g = np.asarray(jnp.argmax(logits[:, 0], axis=-1))     # (S, Q)
+            finite = np.asarray(jnp.isfinite(logits[:, 0]).all(axis=-1))
+        accepted: dict[int, int] = {}
+        commit_lens = np.zeros(pool.n_slots, np.int32)
+        for s in active:
+            d = drafts[s.index]
+            a = 0
+            while a < len(d) and int(d[a]) == int(g[s.index, a]):
+                a += 1
+            accepted[s.index] = a
+            commit_lens[s.index] = 1 + a
+        with tel.timed("spec_rollback"):
+            pool.spec_commit(params, jtoks, jposs, commit_lens, ctx)
+        dt = time.monotonic() - t0
+        emitted = 0
+        for s in active:
+            a = accepted[s.index]
+            if not finite[s.index, :a + 1].all():
+                raise RuntimeError(
+                    f"non-finite logits in speculative step for request "
+                    f"{s.req.rid} (compressed reconstruction or model "
+                    f"numerics are broken)")
+            for t in g[s.index, :a + 1]:
+                s.req.generated.append(int(t))
+            emitted += a + 1
+            s.pos += a + 1
+            s.tok = int(g[s.index, a])
+            m.record_spec(len(drafts[s.index]), a)
+            self._maybe_finish(pool, s, completed)
+        m.record_decode_step(emitted, dt, n_slots=pool.n_slots)
+        m.record_pages(pool.pages_in_use(),
+                       pool.allocator.total if pool.paged else 0)
+        if pool.prefix is not None:
+            m.record_shared_pages(pool.allocator.shared_pages())
+        m.record_kv_gather(pool.gather_bytes_per_step,
+                           pool.gather_bytes_avoided_per_step)
+        if pool.codec:
+            m.record_kv_codec(pool.pages_in_use() * pool.page_bytes_fp,
+                              pool.pages_in_use() *
+                              pool.page_bytes_resident)
+        if self.log_every and m.decode_steps % self.log_every == 0:
+            self.emit(self.engine.stats_line())
 
     def _step(self, pool: SlotPool, completed: list[Request]) -> None:
         m = self.engine.metrics

@@ -66,36 +66,34 @@ class TestTokenEquivalence:
         base = serve(engine, reqs)
         assert serve(engine, reqs, prefill_chunk=6, kv_page_size=8) == base
 
-    def test_recurrent_arch_falls_back_to_monolithic(self):
-        """recurrentgemma has RG-LRU blocks -> chunked prefill is gated
-        off with a note, and serving still completes correctly.  The
-        downgrade warns (warn-once per family), so the trigger rides
-        inside ``pytest.warns`` — the suite escalates any RuntimeWarning
-        that escapes a test to an error."""
-        from repro.runtime import scheduler as sched_mod
-
-        engine = make_engine("recurrentgemma-2b")
-        assert not supports_chunked_prefill(engine.cfg)
-        notes = []
+    @pytest.mark.parametrize("arch", ["recurrentgemma-2b", "mamba2-780m"])
+    def test_recurrent_arch_resumes_chunked_prefill(self, arch):
+        """Recurrent blocks (RG-LRU / SSM) resume a prompt mid-cache by
+        seeding their scan from the cached recurrent state: chunked
+        prefill is supported and token-identical to monolithic, with no
+        downgrade warning (the suite escalates stray RuntimeWarnings to
+        errors, so silence is asserted by construction)."""
+        engine = make_engine(arch)
+        assert supports_chunked_prefill(engine.cfg)
         rng = np.random.default_rng(5)
-        reqs = [(rng.integers(0, engine.cfg.vocab_size, 6), 4)]
+        reqs = [(rng.integers(0, engine.cfg.vocab_size, L), g)
+                for L, g in [(9, 4), (4, 6), (13, 3)]]
         base = serve(engine, reqs)
-        sched_mod._FALLBACK_WARNED.clear()     # deterministic first hit
-        with pytest.warns(RuntimeWarning, match="monolithic"):
-            out = serve(engine, reqs, prefill_chunk=4, emit=notes.append)
-        assert out == base
-        assert any("monolithic" in n for n in notes)
+        for chunk in (1, 4, 64):
+            assert serve(engine, reqs, prefill_chunk=chunk) == base, chunk
 
-    def test_recurrent_fallback_warns_once_with_reason(self):
+    def test_multimodal_fallback_warns_once_with_reason(self):
         """The monolithic-prefill downgrade is never silent: the first
         Scheduler that hits it raises a RuntimeWarning naming the reason
-        (supports_chunked_prefill=False); later Schedulers of the same
-        family stay quiet (warn-once) but still emit the note."""
+        (supports_chunked_prefill=False — a multimodal prefix cannot
+        resume a prompt mid-cache); later Schedulers of the same family
+        stay quiet (warn-once) but still emit the note."""
         import warnings
 
         from repro.runtime import scheduler as sched_mod
 
-        engine = make_engine("recurrentgemma-2b")
+        engine = make_engine("paligemma-3b")
+        assert not supports_chunked_prefill(engine.cfg)
         sched_mod._FALLBACK_WARNED.clear()
         with pytest.warns(RuntimeWarning,
                           match="supports_chunked_prefill=False"):
